@@ -1,0 +1,73 @@
+"""Shared benchmark utilities: wall-clock timing of jit'd callables and a
+tiny trainable transformer used by the mechanism-comparison benchmarks."""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.models import api
+from repro.optim.adamw import AdamWConfig, adamw_init
+from repro.train.loop import TrainConfig, make_train_step
+
+
+def time_fn(fn, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall-time (ms) of fn(*args) after jit warmup."""
+    for _ in range(warmup):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append((time.perf_counter() - t0) * 1e3)
+    return float(np.median(times))
+
+
+@dataclasses.dataclass
+class BenchResult:
+    name: str
+    value: float
+    unit: str
+    extra: dict = dataclasses.field(default_factory=dict)
+
+    def csv(self) -> str:
+        return f"{self.name},{self.value:.6g},{self.unit}"
+
+
+def tiny_lm_config(attn_kind: str = "slay", **overrides):
+    """A trainable-on-CPU SLAYformer-family model used for the Table-3/4/5
+    style comparisons (paper model scaled down, same structure)."""
+    base = configs.get_smoke_config("slayformer-124m",
+                                    attn_kind=attn_kind)
+    import dataclasses as dc
+    defaults = dict(num_layers=2, d_model=96, num_heads=4, num_kv_heads=4,
+                    d_ff=256, vocab_size=64, dtype="float32")
+    defaults.update(overrides)
+    return dc.replace(base, **defaults)
+
+
+def train_lm(cfg, batches, steps: int, lr: float = 3e-3, seed: int = 0):
+    """Train and return (params, history of losses)."""
+    params = api.init_params(cfg, jax.random.PRNGKey(seed))
+    opt_cfg = AdamWConfig(lr=lr, warmup_steps=max(steps // 20, 1),
+                          total_steps=steps)
+    step_fn = jax.jit(make_train_step(
+        cfg, opt_cfg, TrainConfig(microbatches=1, remat=False)))
+    opt = adamw_init(params, opt_cfg)
+    ef = jnp.zeros(())
+    losses = []
+    for i, batch in zip(range(steps), batches):
+        params, opt, ef, metrics = step_fn(params, opt, ef, batch)
+        losses.append(float(metrics["loss"]))
+    return params, losses
+
+
+MECHANISMS = ("softmax", "yat", "yat_spherical", "slay", "favor",
+              "cosformer", "elu1")
+LINEAR_MECHS = ("slay", "favor", "cosformer", "elu1")

@@ -1,0 +1,84 @@
+"""Paper Fig. 2 / Fig. 21: latency / memory / throughput vs sequence length.
+
+Quadratic mechanisms (softmax, exact Yat) blow up in L; linear mechanisms
+(SLAY, FAVOR+, ELU+1, cosformer) stay ~linear. On CPU we measure wall time
+of the isolated attention op (embedding dim 256, 8 heads, batch 1 — the
+paper's benchmark setting, length-scaled to CPU) and report an analytic
+peak-memory proxy (attention-matrix bytes vs feature-state bytes)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import BenchResult, time_fn
+from repro.core import baselines as bl
+from repro.core import kernels
+from repro.core.features import SlayFeatureConfig, init_feature_params
+from repro.core.slay import slay_attention
+
+HEADS, DH = 8, 32   # embedding dim 256 split over 8 heads (paper setup)
+
+
+def _mech_fn(mech: str, key):
+    cfg = SlayFeatureConfig(head_dim=DH)
+    if mech == "slay":
+        params = init_feature_params(key, cfg)
+        return jax.jit(lambda q, k, v: slay_attention(
+            params, q, k, v, cfg, causal=True, chunk_size=128))
+    if mech == "favor":
+        params = bl.favor_init(key, DH)
+        return jax.jit(lambda q, k, v: bl.linear_baseline_attention(
+            "favor", params, q, k, v, chunk_size=128))
+    if mech in ("cosformer", "elu1"):
+        return jax.jit(lambda q, k, v: bl.linear_baseline_attention(
+            mech, None, q, k, v, chunk_size=128))
+    if mech == "softmax":
+        return jax.jit(lambda q, k, v: kernels.softmax_attention(
+            q, k, v, causal=True))
+    if mech == "yat":
+        return jax.jit(lambda q, k, v: kernels.yat_attention(
+            q, k, v, causal=True))
+    raise ValueError(mech)
+
+
+def _mem_bytes(mech: str, L: int) -> float:
+    """Analytic peak attention-state bytes (the paper's Fig. 2 middle)."""
+    if mech in ("softmax", "yat"):
+        return HEADS * L * L * 4.0               # explicit L x L scores
+    m = SlayFeatureConfig(head_dim=DH).feature_dim if mech == "slay" else \
+        (64 if mech == "favor" else 2 * DH if mech == "cosformer" else DH)
+    return HEADS * (L * m + m * DH) * 4.0        # features + running state
+
+
+def run(quick: bool = True) -> list[BenchResult]:
+    lengths = (256, 1024, 4096) if quick else (256, 1024, 4096, 16384)
+    mechs = ("softmax", "yat", "slay", "favor", "elu1", "cosformer")
+    results = []
+    key = jax.random.PRNGKey(0)
+    for mech in mechs:
+        fn = _mech_fn(mech, key)
+        for L in lengths:
+            if mech in ("softmax", "yat") and L > 4096:
+                results.append(BenchResult(
+                    f"fig2/{mech}/L{L}/latency", float("nan"), "ms",
+                    {"oom": True}))
+                continue
+            ks = jax.random.split(jax.random.fold_in(key, L), 3)
+            q = jax.random.normal(ks[0], (1, L, HEADS, DH))
+            k = jax.random.normal(ks[1], (1, L, HEADS, DH))
+            v = jax.random.normal(ks[2], (1, L, HEADS, DH))
+            lat = time_fn(fn, q, k, v, warmup=1, iters=3)
+            results += [
+                BenchResult(f"fig2/{mech}/L{L}/latency", lat, "ms"),
+                BenchResult(f"fig2/{mech}/L{L}/throughput", L / lat * 1e3,
+                            "tok/s"),
+                BenchResult(f"fig2/{mech}/L{L}/attn_state", _mem_bytes(mech, L),
+                            "bytes"),
+            ]
+    return results
+
+
+if __name__ == "__main__":
+    for r in run(quick=False):
+        print(r.csv())

@@ -1,0 +1,54 @@
+"""Paper Fig. 9-12 / App. L.3: quadrature error vs node count R, node/weight
+concentration, and the kernel-reconstruction decomposition (quadrature error
+vs random-feature error)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import BenchResult
+from repro.core import quadrature as qd
+from repro.core.features import (SlayFeatureConfig, init_feature_params,
+                                 slay_features, normalize)
+
+
+def run(quick: bool = True) -> list[BenchResult]:
+    eps = 1e-3
+    x = np.linspace(-1.0, 0.95, 256)
+    exact = qd.exact_spherical_yat(x, eps)
+    results = []
+    for r in (1, 2, 3, 4, 6, 8, 12, 16):
+        approx = qd.quadrature_kernel(x, r, eps)
+        err = float(np.mean(np.abs(approx - exact)
+                            / (np.abs(exact) + 1e-2)))
+        results.append(BenchResult(f"fig9/R{r}/mean_rel_err", err, "ratio"))
+    # Node concentration (Fig. 10/11): share of total weight in first node.
+    for r in (3, 8):
+        s, w = qd.yat_quadrature(r, eps)
+        results.append(BenchResult(f"fig10/R{r}/first_node_weight_share",
+                                   float(w[0] / w.sum()), "ratio"))
+    # Error decomposition (Fig. 13/14): with the exact poly map, increasing
+    # PRF budget D isolates the quadrature error floor.
+    d, R = 16, 3
+    key = jax.random.PRNGKey(0)
+    q = normalize(jax.random.normal(key, (32, d)))
+    k = normalize(jax.random.normal(jax.random.PRNGKey(1), (32, d)))
+    xs = np.asarray(jnp.einsum("id,jd->ij", q, k))
+    quad = qd.quadrature_kernel(xs, R, eps)
+    for D in ((64, 512) if quick else (64, 256, 1024, 4096)):
+        cfg = SlayFeatureConfig(head_dim=d, poly_kind="exact", num_prf=D,
+                                num_quad_nodes=R, eps=eps)
+        params = init_feature_params(jax.random.PRNGKey(2), cfg)
+        est = np.asarray(jnp.einsum(
+            "im,jm->ij", slay_features(q, params, cfg),
+            slay_features(k, params, cfg)))
+        rf_err = float(np.mean(np.abs(est - quad) / (np.abs(quad) + 1e-2)))
+        results.append(BenchResult(f"fig14/D{D}/rf_err_vs_quad", rf_err,
+                                   "ratio"))
+    return results
+
+
+if __name__ == "__main__":
+    for r in run(quick=False):
+        print(r.csv())

@@ -1,0 +1,59 @@
+"""§Roofline table generator: reads the dry-run grid JSON (produced by
+``python -m repro.launch.dryrun --all --out results/dryrun_grid.json``) and
+emits the per-(arch x shape x mesh) roofline table in markdown + CSV.
+
+This benchmark does NOT recompile the grid (that is the dry-run's job, in
+its own 512-device process); it post-processes the recorded artifact."""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import BenchResult
+
+GRID = os.environ.get("DRYRUN_GRID", "results/dryrun_grid.json")
+
+
+def markdown_table(records: list[dict]) -> str:
+    hdr = ("| arch | shape | mesh | dom | t_comp(s) | t_mem(s) | t_coll(s) "
+           "| useful_ratio | roofline_frac |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    rows = []
+    for r in records:
+        if r.get("status") != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                        f"{r['status']} | - | - | - | - | - |")
+            continue
+        ro = r["roofline"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {ro['dominant']} "
+            f"| {ro['t_compute_s']:.3g} | {ro['t_memory_s']:.3g} "
+            f"| {ro['t_collective_s']:.3g} | {ro['useful_flop_ratio']:.3f} "
+            f"| {ro['roofline_fraction']:.3f} |")
+    return hdr + "\n".join(rows)
+
+
+def run(quick: bool = True) -> list[BenchResult]:
+    if not os.path.exists(GRID):
+        return [BenchResult("roofline/grid_missing", 0.0, "n/a",
+                            {"hint": f"run dryrun --all --out {GRID}"})]
+    with open(GRID) as f:
+        records = json.load(f)
+    results = []
+    for r in records:
+        if r.get("status") != "ok":
+            continue
+        ro = r["roofline"]
+        tag = f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}"
+        results.append(BenchResult(f"{tag}/fraction",
+                                   ro["roofline_fraction"], "ratio",
+                                   {"dominant": ro["dominant"]}))
+    os.makedirs("results", exist_ok=True)
+    with open("results/roofline_table.md", "w") as f:
+        f.write(markdown_table(records))
+    return results
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r.csv())

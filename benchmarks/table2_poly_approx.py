@@ -1,0 +1,83 @@
+"""Paper Table 2 / Table 6: polynomial-approximation quality + latency.
+
+For each variant we compute kernel-normalized attention outputs against the
+EXACT spherical-Yat attention oracle (tied projections, identical inputs)
+and report Rel-L2 / cosine / MSE / forward latency, at three feature-budget
+scales (Table 6's Small/Medium/Large, CPU-scaled)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import BenchResult, time_fn
+from repro.core import kernels
+from repro.core import linear_attention as la
+from repro.core.features import (SlayFeatureConfig, init_feature_params,
+                                 slay_features)
+
+VARIANTS = ("anchor", "laplace", "exact", "nystrom", "tensorsketch", "rm")
+SCALES = {           # T (tokens), R, D (prf), P (anchors)
+    "small": (128, 2, 8, 8),
+    "medium": (256, 2, 16, 16),
+    "large": (256, 3, 32, 32),
+}
+
+
+def _attention_outputs(variant: str, scale: str, d: int = 32,
+                       fusion: str = "tensor", seed: int = 0):
+    T, R, D, P = SCALES[scale]
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 4)
+    q = jax.random.normal(ks[0], (1, T, 2, d))
+    k = jax.random.normal(ks[1], (1, T, 2, d))
+    v = jax.random.normal(ks[2], (1, T, 2, d))
+    exact = kernels.yat_attention(q, k, v, causal=True, spherical=True)
+
+    cfg = SlayFeatureConfig(head_dim=d, num_anchors=P, num_prf=D,
+                            num_quad_nodes=R, poly_kind=variant,
+                            fusion=fusion)
+    params = init_feature_params(ks[3], cfg)
+
+    def fwd(q, k, v):
+        qf = slay_features(q, params, cfg)
+        kf = slay_features(k, params, cfg)
+        return la.causal_chunked(qf, kf, v, chunk_size=64)
+
+    fwd_j = jax.jit(fwd)
+    approx = fwd_j(q, k, v)
+    lat = time_fn(fwd_j, q, k, v)
+    return np.asarray(exact, np.float64), np.asarray(approx, np.float64), lat
+
+
+def run(quick: bool = True) -> list[BenchResult]:
+    results = []
+    scales = ("large",) if quick else tuple(SCALES)
+    for scale in scales:
+        for variant in VARIANTS:
+            ex, ap, lat = _attention_outputs(variant, scale)
+            diff = ap - ex
+            rel = np.linalg.norm(diff) / (np.linalg.norm(ex) + 1e-12)
+            cos = float((ex * ap).sum()
+                        / (np.linalg.norm(ex) * np.linalg.norm(ap) + 1e-12))
+            mse = float((diff ** 2).mean())
+            tag = f"table2/{scale}/{variant}"
+            results += [
+                BenchResult(f"{tag}/rel_l2", float(rel), "ratio",
+                            {"cos": cos, "mse": mse}),
+                BenchResult(f"{tag}/latency", lat, "ms"),
+            ]
+        # Hadamard-fusion reference row (paper includes it as a baseline).
+        ex, ap, lat = _attention_outputs("anchor", scale, fusion="hadamard")
+        rel = np.linalg.norm(ap - ex) / (np.linalg.norm(ex) + 1e-12)
+        results += [
+            BenchResult(f"table2/{scale}/hadamard/rel_l2", float(rel),
+                        "ratio"),
+            BenchResult(f"table2/{scale}/hadamard/latency", lat, "ms"),
+        ]
+    return results
+
+
+if __name__ == "__main__":
+    for r in run(quick=False):
+        print(r.csv())

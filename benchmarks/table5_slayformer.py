@@ -1,0 +1,50 @@
+"""Paper Table 5 / Fig. 3: full-model LM comparison across attention
+mechanisms at a matched token budget (CPU-scaled SLAYformer).
+
+Every mechanism shares the identical architecture, optimizer, data and
+token budget — only the attention differs — mirroring the paper's
+controlled setup. Reports final validation loss and perplexity."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import (BenchResult, MECHANISMS, tiny_lm_config,
+                               train_lm)
+from repro.data.pipeline import DataConfig, batch_iterator, make_batch
+from repro.models import api
+
+
+def _val_loss(params, cfg, dcfg, steps=4, start=10_000):
+    losses = []
+    for s in range(start, start + steps):
+        b = make_batch(dcfg, s)
+        loss, _ = api.loss_fn(params, cfg, b)
+        losses.append(float(loss))
+    return float(np.mean(losses))
+
+
+def run(quick: bool = True) -> list[BenchResult]:
+    steps = 60 if quick else 400
+    B, L = 8, 64
+    results = []
+    mechs = (("softmax", "yat_spherical", "slay", "favor")
+             if quick else MECHANISMS)
+    for mech in mechs:
+        cfg = tiny_lm_config(attn_kind=mech, vocab_size=128)
+        dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=L,
+                          global_batch=B, seed=1)
+        batches = (b for _, b in batch_iterator(dcfg))
+        params, losses = train_lm(cfg, batches, steps)
+        val = _val_loss(params, cfg, dcfg)
+        results += [
+            BenchResult(f"table5/{mech}/val_loss", val, "nats",
+                        {"train_final": losses[-1]}),
+            BenchResult(f"table5/{mech}/ppl", float(np.exp(val)), "ppl"),
+        ]
+    return results
+
+
+if __name__ == "__main__":
+    for r in run(quick=True):
+        print(r.csv())

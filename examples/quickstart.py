@@ -1,0 +1,67 @@
+"""Quickstart: SLAY attention in 60 seconds.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+1. Builds the SLAY feature map (anchor poly x PRFs x Gauss-Laguerre nodes).
+2. Runs linear-time attention and compares against exact spherical-Yat
+   attention (the quadratic oracle it approximates).
+3. Trains a 2-layer SLAYformer for 30 steps on synthetic data.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import kernels
+from repro.core.features import SlayFeatureConfig
+from repro.core.slay import slay_attention, slay_init
+from repro.models import api
+from repro import configs
+from repro.data.pipeline import DataConfig, batch_iterator
+from repro.optim.adamw import AdamWConfig, adamw_init
+from repro.train.loop import TrainConfig, make_train_step
+
+
+def demo_attention():
+    print("=== 1. SLAY linear attention vs exact spherical Yat ===")
+    key = jax.random.PRNGKey(0)
+    B, L, H, d = 1, 256, 4, 64
+    ks = jax.random.split(key, 4)
+    q = jax.random.normal(ks[0], (B, L, H, d))
+    k = jax.random.normal(ks[1], (B, L, H, d))
+    v = jax.random.normal(ks[2], (B, L, H, d))
+
+    cfg = SlayFeatureConfig(head_dim=d)   # P=8 anchors, D=16 PRFs, R=3 nodes
+    params = slay_init(ks[3], cfg)
+    y_slay = slay_attention(params, q, k, v, cfg, causal=True)
+    y_exact = kernels.yat_attention(q, k, v, causal=True, spherical=True)
+    rel = float(jnp.linalg.norm(y_slay - y_exact)
+                / jnp.linalg.norm(y_exact))
+    print(f"feature dim m = {cfg.feature_dim} per head "
+          f"(vs L = {L} keys materialized by the quadratic kernel)")
+    print(f"attention-output rel-L2 vs exact: {rel:.3f} "
+          f"(paper Table 2 reports ~0.5 at matched budgets)\n")
+
+
+def demo_training():
+    print("=== 2. Train a tiny SLAYformer ===")
+    cfg = configs.get_smoke_config("slayformer-124m")
+    opt_cfg = AdamWConfig(lr=3e-3, warmup_steps=5, total_steps=30)
+    step = jax.jit(make_train_step(
+        cfg, opt_cfg, TrainConfig(microbatches=1, remat=False)))
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    opt = adamw_init(params, opt_cfg)
+    ef = jnp.zeros(())
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=64, global_batch=8)
+    for i, batch in batch_iterator(dcfg):
+        if i >= 30:
+            break
+        params, opt, ef, m = step(params, opt, ef, batch)
+        if i % 10 == 0:
+            print(f"step {i:3d}  loss {float(m['loss']):.4f}  "
+                  f"grad_norm {float(m['grad_norm']):.3f}")
+    print("done — loss is decreasing under linear-time attention.\n")
+
+
+if __name__ == "__main__":
+    demo_attention()
+    demo_training()

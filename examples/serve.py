@@ -1,0 +1,63 @@
+"""Batched serving demo: prefill + lockstep decode with SLAY's
+constant-size recurrent state (no KV cache growth).
+
+    PYTHONPATH=src python examples/serve.py
+    PYTHONPATH=src python examples/serve.py --arch phi4-mini-3.8b --smoke
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.launch.mesh import make_host_mesh
+from repro.models import api
+from repro.serving.engine import Request, ServingEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="slayformer-124m",
+                    choices=list(configs.ALL_ARCHS))
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--attn-kind", default=None)
+    ap.add_argument("--max-new", type=int, default=24)
+    ap.add_argument("--batch", type=int, default=4)
+    args = ap.parse_args()
+
+    overrides = {"attn_kind": args.attn_kind} if args.attn_kind else {}
+    cfg = configs.get_smoke_config(args.arch, **overrides)
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    mesh = make_host_mesh()
+    engine = ServingEngine(cfg, params, mesh, max_len=256)
+
+    rng = np.random.default_rng(0)
+    reqs = [Request(rng.integers(3, cfg.vocab_size,
+                                 size=rng.integers(4, 12)).astype(np.int32),
+                    max_new_tokens=args.max_new)
+            for _ in range(args.batch)]
+    print(f"serving {len(reqs)} requests on {cfg.name} "
+          f"(attn={cfg.attn_kind})...")
+    t0 = time.perf_counter()
+    outs = engine.generate(reqs, temperature=0.8)
+    dt = time.perf_counter() - t0
+    total = sum(len(o) for o in outs)
+    for i, o in enumerate(outs):
+        print(f"req {i}: prompt_len={len(reqs[i].prompt)} -> {o[:12]}...")
+    print(f"\n{total} tokens in {dt:.2f}s ({total / dt:.1f} tok/s batched)")
+
+    # The long-context pitch: decode state size is context-independent.
+    c_small = api.abstract_cache(cfg, args.batch, 256)
+    c_huge = api.abstract_cache(cfg, args.batch, 524_288)
+
+    def nbytes(tree):
+        return sum(np.prod(x.shape) * x.dtype.itemsize
+                   for x in jax.tree.leaves(tree))
+    print(f"decode-state bytes @256 ctx:  {nbytes(c_small):,}")
+    print(f"decode-state bytes @524288 ctx: {nbytes(c_huge):,} "
+          f"(constant — the paper's O(1) long-context memory)")
+
+
+if __name__ == "__main__":
+    main()

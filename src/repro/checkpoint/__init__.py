@@ -1,0 +1,3 @@
+"""Fault-tolerant checkpointing."""
+from repro.checkpoint.store import (save_checkpoint, restore_checkpoint,
+                                    latest_step, restore_latest)  # noqa

@@ -1,0 +1,200 @@
+"""Architecture + shape-cell configuration system.
+
+Every assigned architecture is an :class:`ArchConfig` (one module per arch in
+this package, exposing ``CONFIG`` and ``smoke_config()``). Shape cells follow
+the assignment:
+
+    train_4k     seq 4096,   batch 256   -> train_step
+    prefill_32k  seq 32768,  batch 32    -> prefill (full forward, no loss)
+    decode_32k   seq 32768,  batch 128   -> serve_step (1 token, 32k cache)
+    long_500k    seq 524288, batch 1     -> serve_step (sub-quadratic only)
+
+``input_specs`` returns jax.ShapeDtypeStruct stand-ins — no allocation — for
+the dry-run's .lower().
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.features import SlayFeatureConfig
+from repro.core.slay import AttentionSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                      # decoder | moe | ssm | hybrid | encdec
+    num_layers: int
+    d_model: int
+    vocab_size: int
+    num_heads: int = 0
+    num_kv_heads: int = 0
+    head_dim: int = 0
+    d_ff: int = 0
+    # Feature flags
+    qk_norm: bool = False
+    attn_logit_softcap: float = 0.0   # gemma2 attention softcap
+    final_logit_softcap: float = 0.0  # gemma2 output softcap
+    local_window: int = 0             # sliding window for local layers
+    local_global_period: int = 0      # every Nth layer global (0 = all global)
+    gated_mlp: bool = True
+    tie_embeddings: bool = True
+    rope_theta: float = 10000.0
+    # MoE
+    moe_experts: int = 0
+    moe_top_k: int = 2
+    # SSM / hybrid
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_ngroups: int = 1
+    ssm_conv_width: int = 4
+    # Encoder-decoder (whisper)
+    enc_layers: int = 0
+    enc_seq: int = 0                  # precomputed frame embeddings length
+    # Modality frontend stub: "" | "audio" | "vision"
+    frontend: str = ""
+    num_patches: int = 0              # VLM: patch-embedding prefix length
+    # Attention backend ("slay" = the paper's technique; "softmax" baseline)
+    attn_kind: str = "slay"
+    slay_anchors: int = 8
+    slay_prf: int = 16
+    slay_quad_nodes: int = 3
+    chunk_size: int = 256
+    # Numerics
+    dtype: str = "bfloat16"
+    # Source provenance (public-literature citation)
+    source: str = ""
+
+    @property
+    def activation_dtype(self):
+        return jnp.bfloat16 if self.dtype == "bfloat16" else jnp.float32
+
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // max(self.num_heads, 1)
+
+    def slay_config(self) -> SlayFeatureConfig:
+        return SlayFeatureConfig(
+            head_dim=self.resolved_head_dim, num_anchors=self.slay_anchors,
+            num_prf=self.slay_prf, num_quad_nodes=self.slay_quad_nodes)
+
+    def attention_spec(self, *, local: bool = False) -> AttentionSpec:
+        """The AttentionSpec for a (global|local) layer under this config."""
+        if local and self.local_window:
+            return AttentionSpec(kind="softmax", window=self.local_window,
+                                 logit_softcap=self.attn_logit_softcap,
+                                 chunk_size=self.chunk_size)
+        if self.attn_kind == "slay":
+            return AttentionSpec(kind="slay", slay=self.slay_config(),
+                                 chunk_size=self.chunk_size)
+        return AttentionSpec(kind=self.attn_kind,
+                             logit_softcap=self.attn_logit_softcap,
+                             chunk_size=self.chunk_size,
+                             slay=self.slay_config()
+                             if self.attn_kind == "slay" else None)
+
+    @property
+    def param_count_dense(self) -> int:
+        """Approximate parameter count N (for MODEL_FLOPS = 6 N D)."""
+        d, L = self.d_model, self.num_layers
+        dh = self.resolved_head_dim
+        n = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        if self.family == "ssm":
+            di = self.ssm_expand * d
+            per = d * (2 * di + 2 * self.ssm_ngroups * self.ssm_state
+                       + di // self.ssm_head_dim) + di * d
+            return n + L * per
+        attn = d * dh * (self.num_heads + 2 * self.num_kv_heads) \
+            + self.num_heads * dh * d
+        mlp = d * self.d_ff * (3 if self.gated_mlp else 2)
+        if self.moe_experts:
+            mlp = mlp * self.moe_experts + d * self.moe_experts
+        per = attn + mlp
+        if self.family == "hybrid":
+            di = self.ssm_expand * d
+            per += d * (2 * di + 2 * self.ssm_ngroups * self.ssm_state
+                        + di // self.ssm_head_dim) + di * d
+        total = n + L * per
+        if self.family == "encdec":
+            total += self.enc_layers * (attn + mlp) + L * attn  # cross-attn
+        return total
+
+    @property
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: top-k experts only)."""
+        if not self.moe_experts:
+            return self.param_count_dense
+        d, L = self.d_model, self.num_layers
+        dh = self.resolved_head_dim
+        attn = d * dh * (self.num_heads + 2 * self.num_kv_heads) \
+            + self.num_heads * dh * d
+        mlp_active = d * self.d_ff * 3 * self.moe_top_k + d * self.moe_experts
+        return self.vocab_size * d + L * (attn + mlp_active)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str                       # train | prefill | decode
+
+
+SHAPE_CELLS = (
+    ShapeCell("train_4k", 4_096, 256, "train"),
+    ShapeCell("prefill_32k", 32_768, 32, "prefill"),
+    ShapeCell("decode_32k", 32_768, 128, "decode"),
+    ShapeCell("long_500k", 524_288, 1, "decode"),
+)
+
+
+def get_cell(name: str) -> ShapeCell:
+    for c in SHAPE_CELLS:
+        if c.name == name:
+            return c
+    raise KeyError(name)
+
+
+def input_specs(cfg: ArchConfig, cell: ShapeCell) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    B, L = cell.global_batch, cell.seq_len
+    i32 = jnp.int32
+    act = cfg.activation_dtype
+
+    def tok(shape):
+        return jax.ShapeDtypeStruct(shape, i32)
+
+    if cell.mode == "train":
+        specs = {}
+        lt = L
+        if cfg.frontend == "vision":
+            specs["patch_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.num_patches, cfg.d_model), act)
+            lt = L - cfg.num_patches
+        if cfg.frontend == "audio":
+            specs["frame_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.enc_seq, cfg.d_model), act)
+        specs["tokens"] = tok((B, lt))
+        specs["labels"] = tok((B, lt))
+        return specs
+    if cell.mode == "prefill":
+        specs = {}
+        lt = L
+        if cfg.frontend == "vision":
+            specs["patch_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.num_patches, cfg.d_model), act)
+            lt = L - cfg.num_patches
+        if cfg.frontend == "audio":
+            specs["frame_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.enc_seq, cfg.d_model), act)
+        specs["tokens"] = tok((B, lt))
+        return specs
+    # decode: one new token; the cache (sized for seq_len) is a separate
+    # donated argument produced by serving.init_cache_specs.
+    return {"tokens": tok((B, 1))}

@@ -1,0 +1,15 @@
+"""SLAY core: the paper's primary contribution in composable JAX.
+
+Public API:
+    SlayConfig, slay_init, slay_attention, slay_decode_step,
+    AttentionSpec, quadrature, features, kernels (exact references),
+    linear_attention (shared O(L) machinery), baselines.
+"""
+from repro.core.slay import (AttentionSpec, SlayConfig, slay_attention,
+                             slay_cross_attention, slay_decode_step,
+                             slay_init, slay_prefill_state)
+
+__all__ = [
+    "AttentionSpec", "SlayConfig", "slay_attention", "slay_cross_attention",
+    "slay_decode_step", "slay_init", "slay_prefill_state",
+]

@@ -1,0 +1,80 @@
+"""Linear-attention baselines the paper compares against (Table 5):
+
+* FAVOR+ (Performer, ReLU random features),
+* ELU+1 linear attention (Katharopoulos et al.),
+* cosformer (Qin et al., 2022) position-reweighted ReLU features.
+
+Each produces feature maps compatible with `repro.core.linear_attention`,
+so the same causal/non-causal/decode machinery serves all mechanisms.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import linear_attention as la
+
+
+def favor_init(key: jax.Array, head_dim: int, num_features: int = 64) -> dict:
+    """Orthogonal-ish Gaussian projection matrix for FAVOR+ ReLU features."""
+    blocks = []
+    n = num_features
+    while n > 0:
+        k, key = jax.random.split(key)
+        g = jax.random.normal(k, (head_dim, head_dim), jnp.float32)
+        qmat, _ = jnp.linalg.qr(g)
+        norms = jnp.linalg.norm(
+            jax.random.normal(key, (head_dim, head_dim), jnp.float32), axis=-1)
+        blocks.append(qmat * norms[:, None])
+        n -= head_dim
+    proj = jnp.concatenate(blocks, axis=0)[:num_features]
+    return {"proj": proj}
+
+
+def favor_features(u: jnp.ndarray, params: dict) -> jnp.ndarray:
+    """ReLU random features (Performer, paper Table 9: M=64 ReLU)."""
+    m = params["proj"].shape[0]
+    proj = jnp.einsum("...d,Dd->...D", u, params["proj"].astype(u.dtype))
+    return jax.nn.relu(proj) / np.sqrt(m)
+
+
+def elu1_features(u: jnp.ndarray) -> jnp.ndarray:
+    """φ(x) = elu(x) + 1 (strictly positive)."""
+    return jax.nn.elu(u) + 1.0
+
+
+def cosformer_features(u: jnp.ndarray, seq_axis: int = -3,
+                       max_len: int | None = None) -> jnp.ndarray:
+    """cosformer: ReLU(u) reweighted by cos/sin(π i / 2M) along the sequence.
+
+    Doubles the feature dim: [φ cos, φ sin]. The cos/sin pair reconstructs
+    the cos(π(i−j)/2M) locality weighting after the linear-attention product.
+    """
+    L = u.shape[seq_axis]
+    M = max_len or L
+    pos = jnp.arange(L, dtype=u.dtype) * (np.pi / (2 * M))
+    shape = [1] * u.ndim
+    shape[seq_axis] = L
+    pos = pos.reshape(shape)
+    phi = jax.nn.relu(u)
+    return jnp.concatenate([phi * jnp.cos(pos), phi * jnp.sin(pos)], axis=-1)
+
+
+def linear_baseline_attention(kind: str, params: dict | None, q, k, v, *,
+                              causal: bool = True, chunk_size: int = 256,
+                              delta: float = 1e-6):
+    """Dispatch for favor|cosformer|elu1 over shared linear machinery."""
+    if kind == "favor":
+        qf, kf = favor_features(q, params), favor_features(k, params)
+    elif kind == "elu1":
+        qf, kf = elu1_features(q), elu1_features(k)
+    elif kind == "cosformer":
+        m = max(q.shape[-3], k.shape[-3])
+        qf = cosformer_features(q, max_len=m)
+        kf = cosformer_features(k, max_len=m)
+    else:
+        raise ValueError(f"unknown linear baseline {kind}")
+    if causal:
+        return la.causal_chunked(qf, kf, v, chunk_size=chunk_size, delta=delta)
+    return la.noncausal(qf, kf, v, delta=delta)

@@ -1,0 +1,215 @@
+"""Random / deterministic feature maps for the SLAY kernel factorization.
+
+Two ingredients (paper §2.4):
+
+* polynomial features for x^2 = (q̂ᵀk̂)^2 — five variants. Anchor features
+  (nonnegative, default) carry the positivity guarantee; exact vec(uuᵀ) is
+  exact; TensorSketch / Random Maclaurin / Nystrom are signed baselines.
+* positive random features (PRFs) for e^{2s x} (Choromanski et al., 2021).
+
+All maps operate on the trailing dimension: u has shape (..., d) and the
+feature output has shape (..., F).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import quadrature
+
+PolyKind = Literal["anchor", "exact", "rm", "tensorsketch", "nystrom",
+                   "laplace"]   # "laplace" = no polynomial factor (App. F)
+FusionKind = Literal["tensor", "subsample", "hadamard"]
+
+
+def normalize(u: jnp.ndarray, axis: int = -1, eps: float = 1e-6) -> jnp.ndarray:
+    """L2-normalize onto the unit sphere (paper Eq. 2). Stable at ~0."""
+    # rsqrt in fp32 for stability under bf16 activations.
+    sq = jnp.sum(jnp.square(u.astype(jnp.float32)), axis=axis, keepdims=True)
+    inv = jax.lax.rsqrt(sq + eps)
+    return (u.astype(jnp.float32) * inv).astype(u.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Polynomial factor  (q̂ᵀk̂)^2
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SlayFeatureConfig:
+    """Static configuration of the SLAY feature map (per attention head)."""
+
+    head_dim: int
+    num_anchors: int = 8          # P
+    num_prf: int = 16             # D
+    num_quad_nodes: int = 3       # R
+    eps: float = 1e-3             # kernel stabilizer (C = 2 + eps)
+    poly_kind: PolyKind = "anchor"
+    fusion: FusionKind = "tensor"
+    sketch_dim: int = 0           # D_t for fusion="subsample" (0 -> P*D)
+    prf_antithetic: bool = True   # pair omega with -omega (variance reduction)
+
+    @property
+    def poly_dim(self) -> int:
+        if self.poly_kind == "exact":
+            return self.head_dim * self.head_dim
+        if self.poly_kind == "laplace":
+            return 1
+        return self.num_anchors
+
+    @property
+    def node_dim(self) -> int:
+        if self.fusion == "hadamard":
+            return max(self.poly_dim, self.num_prf)
+        if self.fusion == "subsample" and self.sketch_dim:
+            return self.sketch_dim
+        return self.poly_dim * self.num_prf
+
+    @property
+    def feature_dim(self) -> int:
+        """m — final concatenated feature dimension."""
+        return self.num_quad_nodes * self.node_dim
+
+
+def init_feature_params(key: jax.Array, cfg: SlayFeatureConfig) -> dict:
+    """Draw the random projections used by the feature map.
+
+    anchors: (P, d) unit rows; omegas: (D, d) iid N(0, I) (antithetic pairs
+    when enabled); subsample indices for the sketched Kronecker fusion.
+    """
+    k_anchor, k_omega, k_idx, k_rm = jax.random.split(key, 4)
+    d = cfg.head_dim
+    anchors = jax.random.normal(k_anchor, (cfg.num_anchors, d), jnp.float32)
+    anchors = anchors / jnp.linalg.norm(anchors, axis=-1, keepdims=True)
+    if cfg.prf_antithetic and cfg.num_prf % 2 == 0:
+        half = jax.random.normal(k_omega, (cfg.num_prf // 2, d), jnp.float32)
+        omegas = jnp.concatenate([half, -half], axis=0)
+    else:
+        omegas = jax.random.normal(k_omega, (cfg.num_prf, d), jnp.float32)
+    params = {"anchors": anchors, "omegas": omegas}
+    if cfg.poly_kind == "rm":
+        r = jax.random.rademacher(k_rm, (2, cfg.num_anchors, d), jnp.float32)
+        params["rm_signs"] = r
+    if cfg.fusion == "subsample" and cfg.sketch_dim:
+        total = cfg.poly_dim * cfg.num_prf
+        idx = jax.random.choice(k_idx, total, (cfg.sketch_dim,), replace=False)
+        params["subsample_idx"] = idx
+    return params
+
+
+def poly_features(u: jnp.ndarray, params: dict, cfg: SlayFeatureConfig) -> jnp.ndarray:
+    """φ_poly(u): feature map for the degree-2 polynomial kernel (uᵀv)²."""
+    if cfg.poly_kind == "anchor":
+        # φ_anc(u) = [(uᵀa_i)²]_i / sqrt(P)  — nonnegative (paper §2.4.2).
+        proj = jnp.einsum("...d,pd->...p", u, params["anchors"].astype(u.dtype))
+        return jnp.square(proj) / np.sqrt(cfg.num_anchors)
+    if cfg.poly_kind == "exact":
+        # vec(u uᵀ): exact, d² features.
+        outer = u[..., :, None] * u[..., None, :]
+        return outer.reshape(*u.shape[:-1], cfg.head_dim * cfg.head_dim)
+    if cfg.poly_kind == "rm":
+        # Random Maclaurin: (rᵀu)(sᵀu), unbiased but signed.
+        r, s = params["rm_signs"][0], params["rm_signs"][1]
+        pr = jnp.einsum("...d,pd->...p", u, r.astype(u.dtype))
+        ps = jnp.einsum("...d,pd->...p", u, s.astype(u.dtype))
+        return (pr * ps) / np.sqrt(cfg.num_anchors)
+    if cfg.poly_kind == "nystrom":
+        # K_xA (K_AA + λI)^{-1/2}; signed via the whitening inverse.
+        a = params["anchors"].astype(jnp.float32)
+        kaa = jnp.square(a @ a.T)
+        lam = 1e-4
+        evals, evecs = jnp.linalg.eigh(kaa + lam * jnp.eye(cfg.num_anchors))
+        whiten = evecs @ jnp.diag(jax.lax.rsqrt(jnp.maximum(evals, 1e-12))) @ evecs.T
+        kxa = jnp.square(jnp.einsum("...d,pd->...p", u.astype(jnp.float32), a))
+        return (kxa @ whiten).astype(u.dtype)
+    if cfg.poly_kind == "tensorsketch":
+        # Count-sketch of u composed twice via FFT (Pham & Pagh 2013).
+        return _tensorsketch(u, params, cfg)
+    if cfg.poly_kind == "laplace":
+        # "Laplace-only" baseline (paper §3.1 / App. F): drop the x² factor;
+        # the estimator targets Σ w_r e^{2s_r x} instead of the Yat kernel.
+        return jnp.ones((*u.shape[:-1], 1), u.dtype)
+    raise ValueError(f"unknown poly_kind {cfg.poly_kind}")
+
+
+def _tensorsketch(u: jnp.ndarray, params: dict, cfg: SlayFeatureConfig) -> jnp.ndarray:
+    d, dp = cfg.head_dim, cfg.num_anchors
+    # Derive deterministic hash/sign tables from the anchor RNG (folded in
+    # params to stay functional): reuse anchors bits for reproducibility.
+    key = jax.random.PRNGKey(17)
+    kh1, kh2, ks1, ks2 = jax.random.split(key, 4)
+    h1 = jax.random.randint(kh1, (d,), 0, dp)
+    h2 = jax.random.randint(kh2, (d,), 0, dp)
+    s1 = jax.random.rademacher(ks1, (d,), jnp.float32)
+    s2 = jax.random.rademacher(ks2, (d,), jnp.float32)
+    uf = u.astype(jnp.float32)
+    c1 = jnp.zeros((*u.shape[:-1], dp), jnp.float32).at[..., h1].add(uf * s1)
+    c2 = jnp.zeros((*u.shape[:-1], dp), jnp.float32).at[..., h2].add(uf * s2)
+    out = jnp.fft.irfft(jnp.fft.rfft(c1, axis=-1) * jnp.fft.rfft(c2, axis=-1), n=dp, axis=-1)
+    return out.astype(u.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Exponential factor  e^{2 s x}  — positive random features
+# ---------------------------------------------------------------------------
+
+
+def prf_features(u: jnp.ndarray, omegas: jnp.ndarray, s: jnp.ndarray) -> jnp.ndarray:
+    """φ_PRF(u; s) = exp(√(2s) ωᵢᵀu − s)/√D (paper Eq. 9). u must be unit-norm.
+
+    s may be scalar or (R,) — with (R,) the output gains a leading-node axis
+    appended as (..., R, D).
+    """
+    d_feat = omegas.shape[0]
+    proj = jnp.einsum("...d,Dd->...D", u, omegas.astype(u.dtype))
+    s = jnp.asarray(s, dtype=u.dtype)
+    if s.ndim == 0:
+        logits = jnp.sqrt(2.0 * s) * proj - s
+        return jnp.exp(logits) / np.sqrt(d_feat)
+    # (..., R, D)
+    logits = jnp.sqrt(2.0 * s)[..., :, None] * proj[..., None, :] - s[..., :, None]
+    return jnp.exp(logits) / np.sqrt(d_feat)
+
+
+# ---------------------------------------------------------------------------
+# Fused SLAY feature map  Ψ(u)
+# ---------------------------------------------------------------------------
+
+
+def slay_features(u: jnp.ndarray, params: dict, cfg: SlayFeatureConfig) -> jnp.ndarray:
+    """Ψ(u) ∈ (..., m): concatenation over quadrature nodes of the fused
+    (polynomial ⊗ PRF) features, scaled by √w_r (paper Eq. 10).
+
+    Inputs are normalized internally; callers may pass raw q/k head vectors.
+    """
+    u = normalize(u)
+    s_np, w_np = quadrature.yat_quadrature(cfg.num_quad_nodes, cfg.eps)
+    s = jnp.asarray(s_np, dtype=u.dtype)
+    w = jnp.asarray(w_np, dtype=u.dtype)
+
+    phi_p = poly_features(u, params, cfg)                 # (..., Dp)
+    phi_e = prf_features(u, params["omegas"], s)          # (..., R, D)
+
+    sqrt_w = jnp.sqrt(w)                                  # (R,)
+    if cfg.fusion == "hadamard":
+        # Elementwise fusion (biased baseline, paper App. F).
+        dim = cfg.node_dim
+        pp = jnp.pad(phi_p, [(0, 0)] * (phi_p.ndim - 1) + [(0, dim - phi_p.shape[-1])],
+                     constant_values=1.0) if phi_p.shape[-1] < dim else phi_p[..., :dim]
+        pe = jnp.pad(phi_e, [(0, 0)] * (phi_e.ndim - 1) + [(0, dim - phi_e.shape[-1])],
+                     constant_values=1.0) if phi_e.shape[-1] < dim else phi_e[..., :dim]
+        fused = sqrt_w[:, None] * pp[..., None, :] * pe   # (..., R, dim)
+    else:
+        # Explicit Kronecker per node: (..., R, Dp*D). Positivity preserved
+        # when φ_poly >= 0 (anchor/exact).
+        kron = phi_p[..., None, :, None] * phi_e[..., :, None, :]  # (...,R,Dp,D)
+        fused = sqrt_w[:, None, None] * kron
+        fused = fused.reshape(*fused.shape[:-2], cfg.poly_dim * cfg.num_prf)
+        if cfg.fusion == "subsample" and cfg.sketch_dim:
+            scale = np.sqrt(cfg.poly_dim * cfg.num_prf / cfg.sketch_dim)
+            fused = fused[..., params["subsample_idx"]] * scale
+    return fused.reshape(*u.shape[:-1], cfg.feature_dim)

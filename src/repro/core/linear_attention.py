@@ -1,0 +1,143 @@
+"""Linear-time attention contractions (paper Eq. 11 and Algorithm 1).
+
+Given feature maps Ψ(Q) ∈ (..., L, H, m), Ψ(K) ∈ (..., L, Hkv, m) and values
+V ∈ (..., L, Hkv, dv) (GQA: H = Hkv·G, the kv features/values are shared
+across each group of G query heads *without* materializing the repeat):
+
+    Y = Ψ(Q) (Ψ(K)ᵀ V) / (Ψ(Q) (Ψ(K)ᵀ 1) + δ)
+
+* non-causal: two einsums, O(L·m·dv).
+* causal: chunk-parallel form — intra-chunk quadratic on features (MXU
+  friendly T×T tiles) + inter-chunk running state via `lax.scan`
+  (O(L·T·m + L·m·dv) time, O(m·dv) carry). This is the TPU-native
+  adaptation of the GPU per-token recurrence (DESIGN.md §3).
+* decode: O(m·dv) per token with persistent (S, z) state.
+
+All accumulation is fp32 regardless of input dtype.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class LinearState(NamedTuple):
+    """Running linear-attention state: S = ΣΨ(k)ᵀv, z = ΣΨ(k)."""
+
+    s: jnp.ndarray  # (..., Hkv, m, dv)
+    z: jnp.ndarray  # (..., Hkv, m)
+
+
+def _group(qf: jnp.ndarray, num_kv: int) -> jnp.ndarray:
+    """(..., L, H, m) -> (..., L, Hkv, G, m)."""
+    *lead, L, H, m = qf.shape
+    if H % num_kv:
+        raise ValueError(f"q heads {H} not divisible by kv heads {num_kv}")
+    return qf.reshape(*lead, L, num_kv, H // num_kv, m)
+
+
+def noncausal(qf, kf, v, delta: float = 1e-6):
+    """Non-causal (or cross-) linear attention; kf/v may have length != L."""
+    num_kv = kf.shape[-2]
+    qg = _group(qf, num_kv)
+    acc = jnp.float32
+    s = jnp.einsum("...lkm,...lkd->...kmd", kf, v, preferred_element_type=acc)
+    z = jnp.sum(kf.astype(acc), axis=-3)  # (..., Hkv, m)
+    num = jnp.einsum("...lkgm,...kmd->...lkgd", qg, s, preferred_element_type=acc)
+    den = jnp.einsum("...lkgm,...km->...lkg", qg, z, preferred_element_type=acc)
+    out = num / (den[..., None] + delta)
+    return out.reshape(*qf.shape[:-1], v.shape[-1]).astype(v.dtype)
+
+
+def causal_chunked(qf, kf, v, chunk_size: int = 256, delta: float = 1e-6):
+    """Causal linear attention via chunked prefix state (pure-jnp oracle for
+    the Pallas kernel; also the general-rank training path).
+
+    qf: (..., L, H, m), kf: (..., L, Hkv, m), v: (..., L, Hkv, dv).
+    L is zero-padded to a chunk multiple (zero features contribute nothing
+    to the running state, and padded query rows are sliced away).
+    """
+    *lead, L, H, m = qf.shape
+    num_kv, dv = kf.shape[-2], v.shape[-1]
+    if L % chunk_size:
+        pad = chunk_size - L % chunk_size
+        padding = [(0, 0)] * (len(lead)) + [(0, pad), (0, 0), (0, 0)]
+        out = causal_chunked(jnp.pad(qf, padding), jnp.pad(kf, padding),
+                             jnp.pad(v, padding), chunk_size, delta)
+        return out[..., :L, :, :]
+    C, T = L // chunk_size, chunk_size
+    acc = jnp.float32
+
+    qg = _group(qf, num_kv).reshape(*lead, C, T, num_kv, H // num_kv, m)
+    kc = kf.reshape(*lead, C, T, num_kv, m)
+    vc = v.reshape(*lead, C, T, num_kv, dv)
+
+    # Move chunk axis to front for scan.
+    nlead = len(lead)
+    qg = jnp.moveaxis(qg, nlead, 0)
+    kc = jnp.moveaxis(kc, nlead, 0)
+    vc = jnp.moveaxis(vc, nlead, 0)
+
+    tril = jnp.tril(jnp.ones((T, T), bool))
+
+    def step(carry, inp):
+        s, z = carry  # (..., Hkv, m, dv), (..., Hkv, m)
+        q_c, k_c, v_c = inp
+        # Inter-chunk contribution from the prefix state.
+        num = jnp.einsum("...tkgm,...kmd->...tkgd", q_c, s,
+                         preferred_element_type=acc)
+        den = jnp.einsum("...tkgm,...km->...tkg", q_c, z,
+                         preferred_element_type=acc)
+        # Intra-chunk causal quadratic on features.
+        scores = jnp.einsum("...tkgm,...ukm->...kgtu", q_c, k_c,
+                            preferred_element_type=acc)
+        scores = jnp.where(tril, scores, 0.0)
+        num += jnp.einsum("...kgtu,...ukd->...tkgd", scores,
+                          v_c.astype(acc), preferred_element_type=acc)
+        den += jnp.sum(scores, axis=-1).swapaxes(-1, -3).swapaxes(-1, -2)
+        # Update running state.
+        s = s + jnp.einsum("...tkm,...tkd->...kmd", k_c, v_c,
+                           preferred_element_type=acc)
+        z = z + jnp.sum(k_c.astype(acc), axis=-3)
+        out = (num / (den[..., None] + delta)).astype(v.dtype)
+        return (s, z), out
+
+    s0 = jnp.zeros((*lead, num_kv, m, dv), acc)
+    z0 = jnp.zeros((*lead, num_kv, m), acc)
+    (_, _), ys = jax.lax.scan(step, (s0, z0), (qg, kc, vc))
+    ys = jnp.moveaxis(ys, 0, nlead)  # back to (..., C, T, Hkv, G, dv)
+    return ys.reshape(*lead, L, H, dv)
+
+
+def init_state(lead_shape, num_kv: int, m: int, dv: int) -> LinearState:
+    return LinearState(
+        s=jnp.zeros((*lead_shape, num_kv, m, dv), jnp.float32),
+        z=jnp.zeros((*lead_shape, num_kv, m), jnp.float32),
+    )
+
+
+def prefill_state(kf, v) -> LinearState:
+    """Absorb a whole prompt into the decode state (causal prefix total)."""
+    s = jnp.einsum("...lkm,...lkd->...kmd", kf, v,
+                   preferred_element_type=jnp.float32)
+    z = jnp.sum(kf.astype(jnp.float32), axis=-3)
+    return LinearState(s, z)
+
+
+def decode_step(qf, kf, v, state: LinearState, delta: float = 1e-6):
+    """One autoregressive token: qf (..., H, m), kf (..., Hkv, m),
+    v (..., Hkv, dv). Returns (y (..., H, dv), new_state). O(m·dv)."""
+    num_kv = kf.shape[-2]
+    s = state.s + jnp.einsum("...km,...kd->...kmd", kf, v,
+                             preferred_element_type=jnp.float32)
+    z = state.z + kf.astype(jnp.float32)
+    *lead, H, m = qf.shape
+    qg = qf.reshape(*lead, num_kv, H // num_kv, m)
+    num = jnp.einsum("...kgm,...kmd->...kgd", qg, s,
+                     preferred_element_type=jnp.float32)
+    den = jnp.einsum("...kgm,...km->...kg", qg, z,
+                     preferred_element_type=jnp.float32)
+    y = (num / (den[..., None] + delta)).reshape(*lead, H, v.shape[-1])
+    return y.astype(v.dtype), LinearState(s, z)

@@ -1,0 +1,4 @@
+"""Data pipeline: deterministic, shard-aware synthetic streams + the
+paper's 22 synthetic benchmark tasks."""
+from repro.data.pipeline import DataConfig, make_batch, batch_iterator  # noqa
+from repro.data import tasks  # noqa: F401

@@ -1,0 +1,5 @@
+"""Distribution: logical-axis sharding rules, gradient compression, and
+collective helpers for the (pod, data, model) production mesh."""
+from repro.distributed.sharding import (ShardingRules, DEFAULT_RULES,
+                                        logical_to_sharding, shard_params,
+                                        batch_sharding)  # noqa: F401

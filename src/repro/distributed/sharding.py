@@ -1,0 +1,227 @@
+"""Logical-axis sharding: GSPMD rules with divisibility-aware fallback.
+
+Model code annotates parameters with *logical* axis names (see
+``repro.models.layers.ParamSpec``); this module maps them to mesh axes:
+
+    batch    -> (pod, data)      activations' batch dim (DP across pods too)
+    embed    -> data             FSDP: params/opt-state sharded over data
+    heads    -> model            TP over attention heads
+    kv_heads -> model            TP over kv heads (falls back when Hkv < mesh)
+    mlp      -> model            TP over FFN hidden
+    vocab    -> model            TP over embedding/unembedding rows
+    experts  -> model            EP over MoE experts
+    layers   -> None             scan axis, never sharded
+    seq      -> model            SP for long-context activations
+
+The fallback rule: if a tensor dim is not divisible by the mesh-axis size
+(e.g. granite's single KV head over 16-way model parallelism), the rule
+engine *drops the mesh axis* (replicates) rather than failing — recorded so
+the dry-run report can show which dims replicated.
+
+Rules are data (a dataclass), so perf iterations can swap whole schemes
+(§Perf beyond-paper experiments) without touching model code.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """logical axis name -> mesh axis (or tuple of mesh axes, or None).
+
+    The ``act_*`` entries govern *activation* constraints
+    (``with_sharding_constraint`` inside the model forward):
+
+        act_batch   batch dim of every activation          -> DP
+        act_embed   residual-stream d_model dim            -> None (replicated)
+        act_heads   per-head dims of q/k/v/attn-out        -> TP
+        act_mlp     FFN hidden dim                         -> TP
+        act_seq     sequence dim (sequence parallelism)    -> None at 4k
+
+    Megatron-style defaults: residual replicated over `model`, heads/FFN
+    sharded over `model` — XLA then inserts exactly one all-reduce after
+    the attention-out / FFN-down contractions instead of the d-sharded
+    residual + per-op resharding it otherwise invents.
+    """
+
+    batch: tuple[str, ...] | str | None = ("pod", "data")
+    embed: tuple[str, ...] | str | None = "data"
+    heads: tuple[str, ...] | str | None = "model"
+    kv_heads: tuple[str, ...] | str | None = "model"
+    mlp: tuple[str, ...] | str | None = "model"
+    vocab: tuple[str, ...] | str | None = "model"
+    experts: tuple[str, ...] | str | None = "model"
+    seq: tuple[str, ...] | str | None = None
+    layers: tuple[str, ...] | str | None = None
+    act_batch: tuple[str, ...] | str | None = ("pod", "data")
+    act_embed: tuple[str, ...] | str | None = None
+    act_heads: tuple[str, ...] | str | None = "model"
+    act_mlp: tuple[str, ...] | str | None = "model"
+    act_seq: tuple[str, ...] | str | None = None
+    act_vocab: tuple[str, ...] | str | None = "model"
+
+    def lookup(self, logical: str | None):
+        if logical is None:
+            return None
+        return getattr(self, logical)
+
+
+DEFAULT_RULES = ShardingRules()
+
+
+# ---------------------------------------------------------------------------
+# Activation-sharding context (MaxText-style logical constraints)
+# ---------------------------------------------------------------------------
+
+_ACTIVATION_CTX: list = []   # stack of (mesh, rules)
+
+
+class activation_sharding:
+    """Context manager installing (mesh, rules) for ``constrain`` calls
+    inside model code. No-op when not entered (CPU unit tests)."""
+
+    def __init__(self, mesh: Mesh, rules: ShardingRules = DEFAULT_RULES):
+        self.pair = (mesh, rules)
+
+    def __enter__(self):
+        _ACTIVATION_CTX.append(self.pair)
+        return self
+
+    def __exit__(self, *exc):
+        _ACTIVATION_CTX.pop()
+        return False
+
+
+def constrain(x, logical_axes: tuple):
+    """with_sharding_constraint by logical activation axes; identity when no
+    activation_sharding context is installed. Divisibility-checked the same
+    way as parameters (drop-axis fallback)."""
+    if not _ACTIVATION_CTX:
+        return x
+    mesh, rules = _ACTIVATION_CTX[-1]
+    spec = partition_spec(mesh, rules, tuple(x.shape), tuple(logical_axes))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def _mesh_axes_present(mesh: Mesh, axes) -> tuple[str, ...]:
+    if axes is None:
+        return ()
+    if isinstance(axes, str):
+        axes = (axes,)
+    return tuple(a for a in axes if a in mesh.shape)
+
+
+def partition_spec(mesh: Mesh, rules: ShardingRules, shape: tuple[int, ...],
+                   logical_axes: tuple[str | None, ...],
+                   fallback_log: list | None = None) -> P:
+    """Build a PartitionSpec honoring divisibility (drop-axis fallback)."""
+    if len(shape) != len(logical_axes):
+        raise ValueError(f"rank mismatch: {shape} vs {logical_axes}")
+    spec = []
+    used: set[str] = set()
+    for dim, logical in zip(shape, logical_axes):
+        axes = _mesh_axes_present(mesh, rules.lookup(logical))
+        # Drop mesh axes already used by an earlier dim of this tensor.
+        axes = tuple(a for a in axes if a not in used)
+        total = int(np.prod([mesh.shape[a] for a in axes], dtype=np.int64)) \
+            if axes else 1
+        while axes and dim % total:
+            dropped = axes[-1]
+            axes = axes[:-1]
+            total = int(np.prod([mesh.shape[a] for a in axes],
+                                dtype=np.int64)) if axes else 1
+            if fallback_log is not None:
+                fallback_log.append((logical, dim, dropped))
+        used.update(axes)
+        if not axes:
+            spec.append(None)
+        elif len(axes) == 1:
+            spec.append(axes[0])
+        else:
+            spec.append(tuple(axes))
+    while spec and spec[-1] is None:
+        spec.pop()
+    return P(*spec)
+
+
+def logical_to_sharding(mesh: Mesh, rules: ShardingRules, abstract, axes,
+                        fallback_log: list | None = None):
+    """Map a pytree of (ShapeDtypeStruct|Array) + logical-axes pytree to
+    NamedShardings."""
+    def one(x, ax):
+        return NamedSharding(mesh, partition_spec(
+            mesh, rules, tuple(x.shape), tuple(ax), fallback_log))
+    return jax.tree.map(one, abstract, axes,
+                        is_leaf=lambda x: isinstance(x, tuple)
+                        and all(isinstance(a, (str, type(None))) for a in x))
+
+
+def shard_params(mesh: Mesh, rules: ShardingRules, params, axes):
+    """Device_put a realized param tree onto the mesh per the rules."""
+    sh = logical_to_sharding(mesh, rules, params, axes)
+    return jax.tree.map(jax.device_put, params, sh)
+
+
+def batch_sharding(mesh: Mesh, rules: ShardingRules = DEFAULT_RULES,
+                   *, extra_rank: int = 1,
+                   batch_size: int | None = None) -> NamedSharding:
+    """Sharding for (B, ...) input batches: batch dim over (pod, data).
+
+    When ``batch_size`` is given, axes that do not divide it are dropped
+    (innermost first) — e.g. the long_500k cell's global_batch=1 replicates
+    rather than failing to lower."""
+    axes = _mesh_axes_present(mesh, rules.batch)
+    if batch_size is not None:
+        total = int(np.prod([mesh.shape[a] for a in axes], dtype=np.int64)) \
+            if axes else 1
+        while axes and batch_size % total:
+            axes = axes[:-1]
+            total = int(np.prod([mesh.shape[a] for a in axes],
+                                dtype=np.int64)) if axes else 1
+    ax = axes[0] if len(axes) == 1 else (tuple(axes) if axes else None)
+    return NamedSharding(mesh, P(ax))
+
+
+def cache_sharding(mesh: Mesh, rules: ShardingRules, abstract):
+    """Decode caches: shard the batch dim (first non-layer dim) over
+    (pod, data) and head-like dims heuristically over model.
+
+    Cache layouts (stacked layers first, then batch):
+        kv ring:      (nl, B, S, Hkv, dh)
+        linear state: (nl, B, Hkv, m, dv) / (nl, B, Hkv, m)
+        ssm state:    (nl, B, nh, hd, ds); conv (nl, B, W-1, C)
+    """
+    baxes = _mesh_axes_present(mesh, rules.batch)
+    bax = baxes[0] if len(baxes) == 1 else (tuple(baxes) if baxes else None)
+    maxes = _mesh_axes_present(mesh, rules.heads)
+    msize = int(np.prod([mesh.shape[a] for a in maxes], dtype=np.int64)) \
+        if maxes else 1
+    mx = maxes[0] if len(maxes) == 1 else (tuple(maxes) if maxes else None)
+
+    def one(x):
+        shape = tuple(x.shape)
+        if len(shape) == 0:
+            return NamedSharding(mesh, P())
+        if len(shape) == 1:  # per-layer scalars (pos)
+            return NamedSharding(mesh, P())
+        bsize = int(np.prod([mesh.shape[a] for a in baxes],
+                            dtype=np.int64)) if baxes else 1
+        spec: list = [None] * len(shape)
+        if shape[1] % max(bsize, 1) == 0 and bsize > 1:
+            spec[1] = bax
+        # Shard the head-like axis (dim 2 for state/ssm, dim 3 for kv ring).
+        for cand in (3, 2):
+            if len(shape) > cand and shape[cand] % max(msize, 1) == 0 \
+                    and msize > 1 and shape[cand] >= msize:
+                spec[cand] = mx
+                break
+        while spec and spec[-1] is None:
+            spec.pop()
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(one, abstract)

@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for SLAY's compute hot-spots.
+
+* ``slay_scan``    — chunked causal linear attention, VMEM running state.
+* ``feature_map``  — fused normalize→poly→PRF→Kronecker feature pipeline.
+* ``ops``          — jit'd layout-adapting wrappers (public entry points).
+* ``ref``          — pure-jnp oracles (match ``repro.core``).
+"""
+from repro.kernels import ops, ref  # noqa: F401

@@ -1,0 +1,81 @@
+"""Pallas TPU kernel: one-token linear-attention decode step.
+
+The serving hot loop: update the running state with the new key/value and
+read out the attention for the G query heads of each kv head —
+
+    S' = S + Ψ(k)ᵀ v        (m x dv, fp32, in-place)
+    z' = z + Ψ(k)           (m,     fp32, in-place)
+    y_g = (q_g S') / (q_g z' + δ)      for g = 1..G
+
+All operands for one kv head fit comfortably in VMEM (m·dv fp32 ≈ 192 KB at
+m=384, dv=128), so the step is a single fused VMEM-resident kernel: one HBM
+read-modify-write of the state per token instead of separate outer-product /
+matvec / reduction kernels. The state buffers are donated
+(input_output_aliased) — the update is truly in place in HBM.
+
+Grid: (BK,) — one program per kv head; the G query heads of that kv head
+are processed together as a (G, m) x (m, dv) MXU matmul.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(qf_ref, kf_ref, v_ref, s_ref, z_ref, y_ref, s_out, z_out, *,
+            delta: float):
+    """Refs (per kv head): qf (1, G, m), kf (1, m), v (1, dv),
+    s (1, m, dv) fp32, z (1, m) fp32; outs y (1, G, dv), s', z'."""
+    kf = kf_ref[0].astype(jnp.float32)                       # (m,)
+    v = v_ref[0].astype(jnp.float32)                         # (dv,)
+    s = s_ref[0] + kf[:, None] * v[None, :]                  # (m, dv)
+    z = z_ref[0] + kf                                        # (m,)
+    q = qf_ref[0].astype(jnp.float32)                        # (G, m)
+    num = jax.lax.dot(q, s, preferred_element_type=jnp.float32)   # (G, dv)
+    den = q @ z[:, None]                                          # (G, 1)
+    y_ref[0] = (num / (den + delta)).astype(y_ref.dtype)
+    s_out[0] = s
+    z_out[0] = z
+
+
+@functools.partial(jax.jit, static_argnames=("delta", "interpret"))
+def decode_linear_attention(qf: jnp.ndarray, kf: jnp.ndarray, v: jnp.ndarray,
+                            s: jnp.ndarray, z: jnp.ndarray, *,
+                            delta: float = 1e-6,
+                            interpret: bool = False):
+    """qf (BH, m), kf (BK, m), v (BK, dv), s (BK, m, dv) f32, z (BK, m) f32
+    -> (y (BH, dv), s', z'). BH must be a multiple of BK (GQA)."""
+    bh, m = qf.shape
+    bk, dv = v.shape
+    if bh % bk:
+        raise ValueError(f"q rows {bh} not divisible by kv rows {bk}")
+    g = bh // bk
+    qg = qf.reshape(bk, g, m)
+
+    y, s2, z2 = pl.pallas_call(
+        functools.partial(_kernel, delta=delta),
+        grid=(bk,),
+        in_specs=[
+            pl.BlockSpec((1, g, m), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, m), lambda i: (i, 0)),
+            pl.BlockSpec((1, dv), lambda i: (i, 0)),
+            pl.BlockSpec((1, m, dv), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, m), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, g, dv), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, m, dv), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, m), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bk, g, dv), v.dtype),
+            jax.ShapeDtypeStruct((bk, m, dv), jnp.float32),
+            jax.ShapeDtypeStruct((bk, m), jnp.float32),
+        ],
+        input_output_aliases={3: 1, 4: 2},   # s, z updated in place
+        interpret=interpret,
+    )(qg, kf, v, s, z)
+    return y.reshape(bh, dv), s2, z2

@@ -1,0 +1,95 @@
+"""Pallas TPU kernel: fused SLAY feature map Ψ(u).
+
+Fuses the whole per-token feature pipeline into one VMEM-resident pass
+(DESIGN.md §3 "Feature-map fusion"):
+
+    normalize → anchor poly φ_p = (uᵀa)²/√P → PRF φ_e = exp(√(2s)ωᵀu − s)/√D
+              → per-node Kronecker √w_r (φ_p ⊗ φ_e) → concat over r.
+
+On GPU these are 4-5 separate elementwise/matmul kernels with HBM traffic of
+~(2R+3)·L·max(P·D, d) floats; fused, each token block makes exactly one HBM
+read (T·d) and one write (T·R·P·D). Both matmuls (u·Aᵀ, u·Ωᵀ) are MXU ops.
+
+Grid: (num_token_blocks,) over a flattened token axis. Anchors/omegas are
+small (P·d, D·d) and are loaded whole into VMEM for every block (they fit in
+a few KB). Quadrature constants (s_r, √w_r) are compile-time Python floats —
+R is small (default 3) so the node loop is unrolled.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core import quadrature
+from repro.core.features import SlayFeatureConfig
+
+
+def _kernel(u_ref, a_ref, w_ref, o_ref, *, s_nodes, sqrt_w, num_anchors,
+            num_prf, norm_eps):
+    """u_ref (T, d), a_ref (P, d), w_ref (D, d), o_ref (T, R*P*D)."""
+    u = u_ref[...].astype(jnp.float32)                     # (T, d)
+    # Spherical constraint (paper Eq. 2), fp32 rsqrt.
+    inv = jax.lax.rsqrt(jnp.sum(u * u, axis=-1, keepdims=True) + norm_eps)
+    u = u * inv
+
+    a = a_ref[...].astype(jnp.float32)                     # (P, d)
+    w = w_ref[...].astype(jnp.float32)                     # (D, d)
+    # Anchor poly features: (uᵀa_i)²/√P  (paper §2.4.2) — MXU matmul.
+    pa = jax.lax.dot_general(u, a, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    phi_p = (pa * pa) * (1.0 / np.sqrt(num_anchors))       # (T, P)
+    pw = jax.lax.dot_general(u, w, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (T, D)
+
+    t = u.shape[0]
+    chunks = []
+    for s, sw in zip(s_nodes, sqrt_w):
+        # PRF for node r (paper Eq. 9): exp(√(2s) ωᵀu − s)/√D.
+        phi_e = jnp.exp(np.sqrt(2.0 * s) * pw - s) * (1.0 / np.sqrt(num_prf))
+        # Kronecker fusion √w_r (φ_p ⊗ φ_e)  (paper Eq. 10).
+        kron = (phi_p[:, :, None] * phi_e[:, None, :]) * sw
+        chunks.append(kron.reshape(t, num_anchors * num_prf))
+    o_ref[...] = jnp.concatenate(chunks, axis=-1).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "block_tokens",
+                                             "interpret"))
+def slay_feature_map(u: jnp.ndarray, anchors: jnp.ndarray,
+                     omegas: jnp.ndarray, cfg: SlayFeatureConfig, *,
+                     block_tokens: int = 256,
+                     interpret: bool = False) -> jnp.ndarray:
+    """u (N, d) -> Ψ(u) (N, m) with m = R·P·D. N must divide block_tokens.
+
+    Only the default configuration (anchor poly, explicit-tensor fusion) is
+    kernelized — it is the hot path; other variants fall back to the jnp
+    reference in ``repro.core.features``.
+    """
+    if cfg.poly_kind != "anchor" or cfg.fusion != "tensor":
+        raise ValueError("kernelized path supports anchor+tensor only")
+    n, d = u.shape
+    if n % block_tokens:
+        raise ValueError(f"N={n} not divisible by block={block_tokens}")
+    s_np, w_np = quadrature.yat_quadrature(cfg.num_quad_nodes, cfg.eps)
+    m = cfg.feature_dim
+
+    return pl.pallas_call(
+        functools.partial(
+            _kernel,
+            s_nodes=tuple(float(x) for x in s_np),
+            sqrt_w=tuple(float(x) for x in np.sqrt(w_np)),
+            num_anchors=cfg.num_anchors, num_prf=cfg.num_prf,
+            norm_eps=1e-6),
+        grid=(n // block_tokens,),
+        in_specs=[
+            pl.BlockSpec((block_tokens, d), lambda i: (i, 0)),
+            pl.BlockSpec((cfg.num_anchors, d), lambda i: (0, 0)),
+            pl.BlockSpec((cfg.num_prf, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_tokens, m), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, m), u.dtype),
+        interpret=interpret,
+    )(u, anchors, omegas)

@@ -1,0 +1,72 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Model code calls these; they translate between the model's
+(..., L, H, feat) layout and the kernels' head-major (BH, L, feat) layout,
+and fall back to the jnp reference on non-TPU backends (interpret mode is
+used for correctness tests, not production CPU execution).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.features import SlayFeatureConfig
+from repro.kernels import feature_map as _fm
+from repro.kernels import ref as _ref
+from repro.kernels import slay_scan as _scan
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def slay_causal_attention(qf: jnp.ndarray, kf: jnp.ndarray, v: jnp.ndarray,
+                          *, chunk_size: int = 256, delta: float = 1e-6,
+                          interpret: bool | None = None) -> jnp.ndarray:
+    """Causal linear attention on fused features.
+
+    qf (..., L, H, m), kf (..., L, Hkv, m), v (..., L, Hkv, dv)
+    -> (..., L, H, dv).
+    """
+    *lead, L, H, m = qf.shape
+    hkv, dv = kf.shape[-2], v.shape[-1]
+    g = H // hkv
+    b = 1
+    for x in lead:
+        b *= x
+    # (..., L, H, m) -> (B*Hkv*G, L, m): group-major so q row i reads kv
+    # row i // g, matching the kernel's index map.
+    qh = (qf.reshape(b, L, hkv, g, m).transpose(0, 2, 3, 1, 4)
+          .reshape(b * hkv * g, L, m))
+    kh = kf.reshape(b, L, hkv, m).transpose(0, 2, 1, 3).reshape(b * hkv, L, m)
+    vh = v.reshape(b, L, hkv, dv).transpose(0, 2, 1, 3).reshape(b * hkv, L, dv)
+
+    use_kernel = _on_tpu() if interpret is None else True
+    if use_kernel:
+        yh = _scan.causal_linear_attention(
+            qh, kh, vh, chunk_size=chunk_size, delta=delta,
+            interpret=bool(interpret))
+    else:
+        yh = _ref.causal_linear_attention_ref(
+            qh, kh, vh, chunk_size=chunk_size, delta=delta)
+    y = (yh.reshape(b, hkv, g, L, dv).transpose(0, 3, 1, 2, 4)
+         .reshape(*lead, L, H, dv))
+    return y
+
+
+def slay_features(u: jnp.ndarray, params: dict, cfg: SlayFeatureConfig, *,
+                  block_tokens: int = 256,
+                  interpret: bool | None = None) -> jnp.ndarray:
+    """Fused Ψ(u) over the trailing dim; u (..., d) -> (..., m)."""
+    use_kernel = (_on_tpu() if interpret is None else True)
+    kernelizable = (cfg.poly_kind == "anchor" and cfg.fusion == "tensor")
+    *lead, d = u.shape
+    n = 1
+    for x in lead:
+        n *= x
+    if use_kernel and kernelizable and n % block_tokens == 0:
+        out = _fm.slay_feature_map(
+            u.reshape(n, d), params["anchors"], params["omegas"], cfg,
+            block_tokens=block_tokens, interpret=bool(interpret))
+        return out.reshape(*lead, cfg.feature_dim)
+    return _ref.slay_features_ref(u, params, cfg)

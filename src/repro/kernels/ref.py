@@ -1,0 +1,63 @@
+"""Pure-jnp oracles for the Pallas kernels in this package.
+
+These intentionally re-route through ``repro.core`` — the core implementations
+are the mathematically-audited references (tested against the closed-form
+kernel in tests/), and the Pallas kernels must match them bit-for-bit up to
+fp32 accumulation order.
+
+Layouts used by the kernels (head-major, TPU-friendly):
+    qf: (BH, L, m)     fused SLAY features of queries, one row per q-head
+    kf: (BK, L, m)     fused features of keys, one row per kv-head
+    v:  (BK, L, dv)
+where BH = batch * num_q_heads, BK = batch * num_kv_heads and the GQA group
+size G = BH // BK maps q-head row i to kv row i // G.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import linear_attention as la
+from repro.core.features import SlayFeatureConfig, slay_features
+
+
+def causal_linear_attention_ref(qf: jnp.ndarray, kf: jnp.ndarray,
+                                v: jnp.ndarray, *, chunk_size: int = 256,
+                                delta: float = 1e-6) -> jnp.ndarray:
+    """Oracle for kernels.slay_scan: head-major chunked causal linear attn.
+
+    qf (BH, L, m), kf (BK, L, m), v (BK, L, dv) -> (BH, L, dv).
+    """
+    bh, L, m = qf.shape
+    bk, _, dv = v.shape
+    g = bh // bk
+    # Reshape into core's (batch, L, heads, feat) convention: treat BK as
+    # batch and G as heads-per-kv so grouping matches i -> i // G.
+    q = qf.reshape(bk, g, L, m).transpose(0, 2, 1, 3)       # (bk, L, g, m)
+    k = kf[:, :, None, :]                                    # (bk, L, 1, m)
+    vv = v[:, :, None, :]                                    # (bk, L, 1, dv)
+    y = la.causal_chunked(q, k, vv, chunk_size=chunk_size, delta=delta)
+    return y.transpose(0, 2, 1, 3).reshape(bh, L, dv)
+
+
+def slay_features_ref(u: jnp.ndarray, params: dict,
+                      cfg: SlayFeatureConfig) -> jnp.ndarray:
+    """Oracle for kernels.feature_map: Ψ(u) over the trailing dim."""
+    return slay_features(u, params, cfg)
+
+
+def decode_linear_attention_ref(qf, kf, v, s, z, *, delta: float = 1e-6):
+    """Oracle for kernels.decode_step: one-token state update + readout.
+
+    qf (BH, m), kf (BK, m), v (BK, dv), s (BK, m, dv), z (BK, m).
+    BK is treated as the batch; each kv row serves its G = BH // BK query
+    heads (q row i -> kv row i // G), expressed to core.decode_step as an
+    explicit singleton kv-head axis.
+    """
+    bh, m = qf.shape
+    bk, dv = v.shape
+    g = bh // bk
+    state = la.LinearState(s[:, None], z[:, None])      # (bk, 1, m, dv)
+    y, new = la.decode_step(qf.reshape(bk, g, m), kf[:, None], v[:, None],
+                            state, delta=delta)
+    return y.reshape(bh, dv), new.s[:, 0], new.z[:, 0]

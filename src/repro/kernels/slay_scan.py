@@ -1,0 +1,124 @@
+"""Pallas TPU kernel: chunked causal linear attention with VMEM-resident state.
+
+TPU-native adaptation of SLAY's causal prefix computation (DESIGN.md §3).
+GPU implementations use a per-token recurrence; on TPU we use the
+chunk-parallel decomposition
+
+    Y_c = Q_c S_{<c} + tril(Q_c K_cᵀ) V_c          (numerator)
+    d_c = Q_c z_{<c} + rowsum(tril(Q_c K_cᵀ))      (denominator)
+    S_c = S_{<c} + K_cᵀ V_c,   z_c = z_{<c} + Σ K_c
+
+so every contraction is an MXU-shaped [T×m]·[m×dv] / [T×m]·[m×T] matmul and
+the running state (S ∈ m×dv fp32, z ∈ m fp32) lives in VMEM scratch across
+the sequential chunk axis of the grid — one HBM round-trip per token block.
+
+Grid: (BH, L // T) with dimension_semantics ("parallel", "arbitrary") — the
+chunk axis iterates innermost and sequentially, so scratch carries state.
+GQA is expressed in the BlockSpec index maps: q-head row h reads kv row
+h // group — the kv features are never materialized per-q-head.
+
+Block shapes: T (chunk) and m (features) should be multiples of 128 for
+MXU/VREG lane alignment; dv is typically 128 (head_dim). VMEM footprint per
+step ≈ T·m (q,k) + T·dv (v,o) + m·dv + m (state) floats — e.g. T=256, m=384,
+dv=128: ~0.9 MB « 16 MB VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, s_ref, z_ref, *, delta: float):
+    """One (head, chunk) grid step. Refs hold VMEM blocks:
+
+    q_ref (1, T, m), k_ref (1, T, m), v_ref (1, T, dv), o_ref (1, T, dv);
+    scratch s_ref (m, dv) fp32, z_ref (1, m) fp32.
+    """
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+        z_ref[...] = jnp.zeros_like(z_ref)
+
+    q = q_ref[0].astype(jnp.float32)          # (T, m)
+    k = k_ref[0].astype(jnp.float32)          # (T, m)
+    v = v_ref[0].astype(jnp.float32)          # (T, dv)
+    s = s_ref[...]                            # (m, dv)
+    z = z_ref[0]                              # (m,)
+
+    # Inter-chunk: prefix state contribution.
+    num = jax.lax.dot(q, s, preferred_element_type=jnp.float32)      # (T, dv)
+    den = q @ z[:, None]                                             # (T, 1)
+
+    # Intra-chunk: causal quadratic on features (T×T stays in VMEM).
+    scores = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)  # (T, T)
+    t = scores.shape[0]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (t, t), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (t, t), 1)
+    scores = jnp.where(rows >= cols, scores, 0.0)
+    num = num + jax.lax.dot(scores, v, preferred_element_type=jnp.float32)
+    den = den + jnp.sum(scores, axis=1, keepdims=True)
+
+    o_ref[0] = (num / (den + delta)).astype(o_ref.dtype)
+
+    # Carry the running state to the next chunk.
+    s_ref[...] = s + jax.lax.dot_general(k, v, (((0,), (0,)), ((), ())),
+                                         preferred_element_type=jnp.float32)
+    z_ref[0] = z + jnp.sum(k, axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk_size", "delta",
+                                             "interpret"))
+def causal_linear_attention(qf: jnp.ndarray, kf: jnp.ndarray, v: jnp.ndarray,
+                            *, chunk_size: int = 256, delta: float = 1e-6,
+                            interpret: bool = False) -> jnp.ndarray:
+    """qf (BH, L, m), kf (BK, L, m), v (BK, L, dv) -> (BH, L, dv).
+
+    BH must be a multiple of BK (GQA group size G = BH // BK); L must be a
+    multiple of ``chunk_size``.
+    """
+    bh, L, m = qf.shape
+    bk, _, dv = v.shape
+    if bh % bk:
+        raise ValueError(f"q rows {bh} not divisible by kv rows {bk}")
+    if L % chunk_size:
+        raise ValueError(f"L={L} not divisible by chunk={chunk_size}")
+    g = bh // bk
+    t = chunk_size
+    grid = (bh, L // t)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, delta=delta),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, t, m), lambda h, c: (h, c, 0)),
+            pl.BlockSpec((1, t, m), lambda h, c: (h // g, c, 0)),
+            pl.BlockSpec((1, t, dv), lambda h, c: (h // g, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, t, dv), lambda h, c: (h, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, L, dv), v.dtype),
+        scratch_shapes=[
+            _scratch((m, dv)),   # S: running ΣKᵀV
+            _scratch((1, m)),    # z: running ΣK
+        ],
+        compiler_params=_tpu_params(),
+        interpret=interpret,
+    )(qf, kf, v)
+
+
+def _scratch(shape):
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.VMEM(shape, jnp.float32)
+
+
+def _tpu_params():
+    from jax.experimental.pallas import tpu as pltpu
+    # Chunk axis must stay sequential ("arbitrary") so VMEM scratch carries
+    # the running state; head axis is embarrassingly parallel.
+    return pltpu.CompilerParams(
+        dimension_semantics=("parallel", "arbitrary"))

@@ -1,0 +1,165 @@
+"""§Perf hillclimb driver: re-lower a cell under a named experiment
+configuration and report the roofline delta vs baseline.
+
+    PYTHONPATH=src python -m repro.launch.perf --cell qwen3-32b:train_4k \
+        --exp mb4,seqpar,grad_bf16
+
+Each experiment is a (rules, train_cfg, cfg_overrides) transform; the
+driver prints the three terms + dominant + roofline fraction so the
+hypothesis → change → measure loop in EXPERIMENTS.md §Perf is mechanical
+and reproducible.
+"""
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+import argparse          # noqa: E402
+import dataclasses       # noqa: E402
+import json              # noqa: E402
+
+from repro import configs                          # noqa: E402
+from repro.distributed import sharding as shd      # noqa: E402
+from repro.launch import dryrun                    # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.train.loop import TrainConfig           # noqa: E402
+from repro.optim.adamw import AdamWConfig          # noqa: E402,F401
+
+
+def _mb(n):
+    def t(rules, tc, ov):
+        return rules, dataclasses.replace(tc, microbatches=n), ov
+    return t
+
+
+def _seqpar(rules, tc, ov):
+    """Sequence parallelism: residual stream seq dim sharded over model
+    between layers (Megatron-SP: the per-layer AR becomes RS+AG and the
+    norm/elementwise work is 1/model-size per device)."""
+    return dataclasses.replace(rules, act_seq="model"), tc, ov
+
+
+def _grad_compress(rules, tc, ov):
+    return rules, dataclasses.replace(tc, compress_grads=True), ov
+
+
+def _no_remat(rules, tc, ov):
+    return rules, dataclasses.replace(tc, remat=False), ov
+
+
+def _save_coll(rules, tc, ov):
+    return rules, dataclasses.replace(tc, remat_policy="save_collectives"), ov
+
+
+def _serving_rules(rules, tc, ov):
+    """Decode-optimized: weights sharded over model only (no per-step FSDP
+    all-gather over data); batch over (pod,data)."""
+    return dataclasses.replace(rules, embed=None, act_embed=None), tc, ov
+
+
+def _fsdp_pod(rules, tc, ov):
+    """Multi-pod ZeRO: shard params/opt over the pod axis as well (512-way
+    total) — halves per-device param+optimizer bytes at the cost of
+    inter-pod weight all-gathers."""
+    return dataclasses.replace(rules, embed=("pod", "data")), tc, ov
+
+
+def _fsdp_model_too(rules, tc, ov):
+    """FSDP over BOTH axes: embed -> (data, model) — params 256-way sharded;
+    weight all-gathers grow but optimizer/memory shrink."""
+    return dataclasses.replace(rules, embed=("data", "model"), heads=None,
+                               mlp=None, vocab=None,
+                               act_heads=None, act_mlp=None), tc, ov
+
+
+def _chunk(n):
+    def t(rules, tc, ov):
+        ov = dict(ov)
+        ov["chunk_size"] = n
+        return rules, tc, ov
+    return t
+
+
+def _anchors(p, d):
+    def t(rules, tc, ov):
+        ov = dict(ov)
+        ov.update(slay_anchors=p, slay_prf=d)
+        return rules, tc, ov
+    return t
+
+
+def _mesh(*shape):
+    def t(rules, tc, ov):
+        ov = dict(ov)
+        ov["__mesh_shape__"] = shape
+        return rules, tc, ov
+    return t
+
+
+EXPERIMENTS = {
+    "baseline": lambda rules, tc, ov: (rules, tc, ov),
+    "mb1": _mb(1), "mb2": _mb(2), "mb4": _mb(4), "mb8": _mb(8),
+    "seqpar": _seqpar,
+    "gradcomp": _grad_compress,
+    "no_remat": _no_remat,
+    "save_coll": _save_coll,
+    "serving_rules": _serving_rules,
+    "fsdp2d": _fsdp_model_too,
+    "fsdp_pod": _fsdp_pod,
+    "chunk128": _chunk(128), "chunk512": _chunk(512),
+    "slay_p4d8": _anchors(4, 8), "slay_p16d32": _anchors(16, 32),
+    # Logical mesh re-splits of the same 256-chip pod (heads-divisibility).
+    "mesh32x8": _mesh(32, 8), "mesh64x4": _mesh(64, 4),
+    "mesh8x32": _mesh(8, 32), "mesh128x2": _mesh(128, 2),
+    "mesh256x1": _mesh(256, 1),
+}
+
+
+def run_experiment(arch: str, shape: str, names: list[str], *,
+                   multi_pod: bool = False) -> dict:
+    rules = shd.DEFAULT_RULES
+    cell = configs.get_cell(shape)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    tc = TrainConfig(
+        microbatches=dryrun.default_microbatches(
+            configs.get_config(arch), cell, mesh),
+        remat=True, compress_grads=False)
+    ov: dict = {}
+    for n in names:
+        rules, tc, ov = EXPERIMENTS[n](rules, tc, ov)
+    mesh_shape = ov.pop("__mesh_shape__", None)
+    rec = dryrun.run_cell(arch, shape, multi_pod=multi_pod, rules=rules,
+                          train_cfg=tc, mesh_shape=mesh_shape, verbose=True,
+                          **ov)
+    rec["experiments"] = names
+    rec["microbatches"] = tc.microbatches
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True, help="arch:shape")
+    ap.add_argument("--exp", default="baseline",
+                    help="comma-separated experiment names, applied in "
+                         f"order; known: {sorted(EXPERIMENTS)}")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    arch, shape = args.cell.split(":")
+    rec = run_experiment(arch, shape, args.exp.split(","),
+                         multi_pod=args.multi_pod)
+    if args.out:
+        existing = []
+        if os.path.exists(args.out):
+            with open(args.out) as f:
+                existing = json.load(f)
+        existing.append(rec)
+        with open(args.out, "w") as f:
+            json.dump(existing, f, indent=1)
+    if rec["status"] != "ok":
+        print(rec.get("error"))
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,131 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Per (arch x shape x mesh) cell we derive three times (seconds), all from the
+PER-DEVICE partitioned HLO program (see ``repro.launch.hlo_cost`` — XLA's
+``cost_analysis()`` undercounts scanned programs by the loop trip count, so
+we parse the HLO text ourselves):
+
+    compute    = device_FLOPs      / 197e12 bf16 FLOP/s
+    memory     = device_HBM_bytes  / 819e9  B/s
+    collective = device_wire_bytes / 50e9   B/s (one ICI link direction)
+
+MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE) gives the "useful" FLOP
+floor; the ratio MODEL_FLOPS/HLO_FLOPs exposes remat/redundancy waste, and
+
+    roofline_fraction = (MODEL_FLOPS / chips / peak) / max(three terms)
+
+is the achievable-MFU bound this cell can reach — the number §Perf iterates
+on. Collective wire bytes use ring-algorithm factors ((G-1)/G etc.) and
+assume the collective serializes on one link direction — a conservative
+bound; 2D torus algorithms can use more links, so real machines may beat
+the collective term.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.launch import hlo_cost
+
+# TPU v5e hardware constants (per chip).
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s per link direction
+HBM_PER_CHIP = 16 * 2**30    # 16 GiB
+
+
+@dataclasses.dataclass
+class Roofline:
+    """All byte/FLOP quantities are PER DEVICE; model_flops is global."""
+
+    flops: float
+    hbm_bytes: float
+    coll_bytes: float
+    chips: int
+    model_flops: float
+    coll_by_kind: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flop_ratio(self) -> float:
+        """MODEL_FLOPS / (total compiled FLOPs across chips)."""
+        total = self.flops * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def t_useful(self) -> float:
+        return self.model_flops / (self.chips * PEAK_FLOPS)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Achievable MFU bound: useful-FLOP time / bound step time."""
+        bound = max(self.t_compute, self.t_memory, self.t_collective)
+        return self.t_useful / bound if bound else 0.0
+
+    def report(self) -> dict:
+        return {
+            "device_flops": self.flops,
+            "device_hbm_bytes": self.hbm_bytes,
+            "device_coll_wire_bytes": self.coll_bytes,
+            "coll_by_kind": {k: float(v)
+                             for k, v in self.coll_by_kind.items()},
+            "chips": self.chips,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective, "dominant": self.dominant,
+            "model_flops": self.model_flops,
+            "useful_flop_ratio": self.useful_flop_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def from_compiled(compiled, chips: int, model_flops: float) -> Roofline:
+    """Parse the compiled per-device program into roofline terms."""
+    totals = hlo_cost.analyze(compiled.as_text())
+    return Roofline(
+        flops=totals.flops, hbm_bytes=totals.hbm_bytes,
+        coll_bytes=totals.coll_wire_bytes, chips=chips,
+        model_flops=model_flops, coll_by_kind=totals.coll_by_kind)
+
+
+def model_flops_for(cfg, cell) -> float:
+    """6*N*D with N = active params, D = tokens processed this step.
+
+    Train counts fwd+bwd (6ND); prefill counts forward only (2ND); decode
+    counts one token per sequence (2ND, D = batch).
+    """
+    n = cfg.active_param_count
+    if cell.mode == "train":
+        return 6.0 * n * cell.global_batch * cell.seq_len
+    if cell.mode == "prefill":
+        return 2.0 * n * cell.global_batch * cell.seq_len
+    return 2.0 * n * cell.global_batch
+
+
+def extract_cost(compiled) -> tuple[float, float]:
+    """(flops, bytes accessed) from compiled.cost_analysis().
+
+    Kept for reference only — XLA counts while-loop bodies once, so these
+    numbers undercount scanned programs. Roofline uses ``from_compiled``.
+    """
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    by = float(cost.get("bytes accessed", 0.0))
+    return flops, by

@@ -1,0 +1,7 @@
+"""Model zoo: unified decoder LM (dense/MoE/SSM/hybrid), Whisper enc-dec,
+attention dispatch, and the shared layer library.
+
+Use :mod:`repro.models.api` as the entry point — it dispatches on
+``ArchConfig.family``.
+"""
+from repro.models import api  # noqa: F401

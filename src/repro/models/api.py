@@ -1,0 +1,67 @@
+"""Family-dispatching model API: one call surface for all 10+ architectures.
+
+    params    = api.init_params(cfg, key)
+    axes      = api.param_axes(cfg)          # logical sharding axes pytree
+    loss, mx  = api.loss_fn(params, cfg, batch)
+    logits,c  = api.prefill(params, cfg, **batch)
+    logits,c  = api.decode_step(params, cfg, cache, tokens)
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer, whisper
+
+
+def _mod(cfg: ArchConfig):
+    return whisper if cfg.family == "encdec" else transformer
+
+
+def init_params(cfg: ArchConfig, key: jax.Array) -> dict:
+    return _mod(cfg).init_params(cfg, key)
+
+
+def abstract_params(cfg: ArchConfig) -> dict:
+    """ShapeDtypeStruct pytree of the parameters — no allocation (dry-run)."""
+    return jax.eval_shape(
+        lambda k: init_params(cfg, k), jax.ShapeDtypeStruct((2,), "uint32"))
+
+
+def param_axes(cfg: ArchConfig) -> dict:
+    return _mod(cfg).param_axes(cfg)
+
+
+def loss_fn(params, cfg: ArchConfig, batch: dict, *, remat: bool = False):
+    return _mod(cfg).loss_fn(params, cfg, batch, remat=remat)
+
+
+def forward(params, cfg: ArchConfig, batch: dict):
+    if cfg.family == "encdec":
+        return whisper.forward(params, cfg, batch["tokens"],
+                               batch["frame_embeds"])
+    return transformer.forward(params, cfg, batch["tokens"],
+                               patch_embeds=batch.get("patch_embeds"))
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int):
+    return _mod(cfg).init_cache(cfg, batch, max_len)
+
+
+def abstract_cache(cfg: ArchConfig, batch: int, max_len: int):
+    """Cache shapes without allocation (decode dry-run cells)."""
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_len))
+
+
+def prefill(params, cfg: ArchConfig, batch: dict, *,
+            max_len: int | None = None):
+    if cfg.family == "encdec":
+        return whisper.prefill(params, cfg, batch["tokens"],
+                               batch["frame_embeds"], max_len=max_len)
+    return transformer.prefill(params, cfg, batch["tokens"],
+                               patch_embeds=batch.get("patch_embeds"),
+                               max_len=max_len)
+
+
+def decode_step(params, cfg: ArchConfig, cache, tokens):
+    return _mod(cfg).decode_step(params, cfg, cache, tokens)

@@ -1,0 +1,191 @@
+"""Attention dispatch: one entry point, many mechanisms.
+
+The paper's technique (SLAY) is a first-class backend here, selected via
+:class:`repro.core.slay.AttentionSpec`. All mechanisms share the model-side
+convention q (..., L, H, Dh), k/v (..., L, Hkv, Dh) -> (..., L, H, Dh) and a
+uniform decode interface over :class:`AttnCache`.
+
+Backends:
+    softmax      — exact quadratic (optionally logit-softcapped / windowed)
+    yat          — exact quadratic Yat-kernel attention (paper Eq. 1)
+    yat_spherical— exact quadratic spherical Yat (paper Eq. 5)
+    slay         — the paper's linear-time mechanism (features + reordering)
+    favor | cosformer | elu1 — linear baselines (paper Table 5)
+
+Decode caches:
+    softmax/yat* — ring-buffer KV cache (windowed when spec.window > 0)
+    linear kinds — constant-size (S, z) running state (the 30x memory win)
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import baselines as bl
+from repro.core import kernels as exact
+from repro.core import linear_attention as la
+from repro.core import slay as slay_mod
+from repro.core.slay import AttentionSpec
+
+
+class AttnCache(NamedTuple):
+    """Uniform decode cache. Exactly one of (kv, state) is meaningful.
+
+    kv:    k,v ring buffers (..., S, Hkv, Dh) + scalar write position.
+    state: linear-attention running state (S = sum psi(k)^T v, z = sum psi(k)).
+    """
+
+    k: jnp.ndarray | None
+    v: jnp.ndarray | None
+    pos: jnp.ndarray | None          # int32 scalar (tokens seen so far)
+    s: jnp.ndarray | None            # (..., Hkv, m, dv) fp32
+    z: jnp.ndarray | None            # (..., Hkv, m)     fp32
+
+
+def init_cache(spec: AttentionSpec, lead_shape, num_kv: int, head_dim: int,
+               dv: int, max_len: int, dtype) -> AttnCache:
+    if spec.is_linear:
+        m = spec.slay.feature_dim if spec.kind == "slay" else _baseline_dim(
+            spec, head_dim)
+        st = la.init_state(lead_shape, num_kv, m, dv)
+        return AttnCache(None, None, jnp.zeros((), jnp.int32), st.s, st.z)
+    size = min(max_len, spec.window) if spec.window else max_len
+    shape = (*lead_shape, size, num_kv, head_dim)
+    return AttnCache(jnp.zeros(shape, dtype),
+                     jnp.zeros((*lead_shape, size, num_kv, dv), dtype),
+                     jnp.zeros((), jnp.int32), None, None)
+
+
+def _baseline_dim(spec: AttentionSpec, head_dim: int) -> int:
+    if spec.kind == "favor":
+        return 64
+    if spec.kind == "cosformer":
+        return 2 * head_dim
+    return head_dim  # elu1
+
+
+def full_attention(spec: AttentionSpec, params: dict | None, q, k, v, *,
+                   causal: bool = True) -> jnp.ndarray:
+    """Full-sequence attention (training / prefill)."""
+    if not spec.is_linear and k.shape[-2] != q.shape[-2]:
+        # Exact quadratic paths operate head-aligned: broadcast kv over the
+        # GQA group (XLA fuses the broadcast into the batched matmul).
+        g = q.shape[-2] // k.shape[-2]
+        k = jnp.repeat(k, g, axis=-2)
+        v = jnp.repeat(v, g, axis=-2)
+    if spec.kind == "softmax":
+        return exact.softmax_attention(
+            q, k, v, causal=causal, logit_softcap=spec.logit_softcap,
+            window=spec.window)
+    if spec.kind in ("yat", "yat_spherical"):
+        return exact.yat_attention(q, k, v, causal=causal,
+                                   spherical=spec.kind == "yat_spherical")
+    if spec.kind == "slay":
+        return slay_mod.slay_attention(
+            params, q, k, v, spec.slay, causal=causal,
+            chunk_size=spec.chunk_size, use_kernel=spec.use_pallas)
+    return bl.linear_baseline_attention(
+        spec.kind, params, q, k, v, causal=causal, chunk_size=spec.chunk_size)
+
+
+def cross_attention(spec: AttentionSpec, params: dict | None, q, k, v):
+    """Non-causal cross-attention (encoder-decoder)."""
+    return full_attention(spec, params, q, k, v, causal=False)
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+
+def prefill_cache(spec: AttentionSpec, params: dict | None, k, v,
+                  cache: AttnCache) -> AttnCache:
+    """Absorb a full prompt's keys/values into a fresh decode cache.
+
+    k/v: (..., L, Hkv, *). Linear kinds reduce to the constant-size state;
+    KV kinds write the (window-truncated) suffix into the ring buffer.
+    """
+    L = k.shape[-3]
+    if spec.is_linear:
+        kf = _features(spec, params, k)
+        st = la.prefill_state(kf, v)
+        return AttnCache(None, None, jnp.asarray(L, jnp.int32), st.s, st.z)
+    size = cache.k.shape[-3]
+    # Keep the most recent `size` tokens, written at ring positions.
+    take = min(L, size)
+    ks, vs = k[..., L - take:, :, :], v[..., L - take:, :, :]
+    idx = (jnp.arange(take) + (L - take)) % size
+    kbuf = cache.k.at[..., idx, :, :].set(ks.astype(cache.k.dtype))
+    vbuf = cache.v.at[..., idx, :, :].set(vs.astype(cache.v.dtype))
+    return AttnCache(kbuf, vbuf, jnp.asarray(L, jnp.int32), None, None)
+
+
+def decode_step(spec: AttentionSpec, params: dict | None, q, k, v,
+                cache: AttnCache) -> tuple[jnp.ndarray, AttnCache]:
+    """One token. q (..., H, Dh), k/v (..., Hkv, *) -> (..., H, dv)."""
+    if spec.is_linear:
+        qf = _features(spec, params, q)
+        kf = _features(spec, params, k)
+        y, st = la.decode_step(qf, kf, v, la.LinearState(cache.s, cache.z))
+        return y, AttnCache(None, None, cache.pos + 1, st.s, st.z)
+
+    size = cache.k.shape[-3]
+    slot = cache.pos % size
+    kbuf = jax.lax.dynamic_update_index_in_dim(
+        cache.k, k.astype(cache.k.dtype), slot, axis=-3)
+    vbuf = jax.lax.dynamic_update_index_in_dim(
+        cache.v, v.astype(cache.v.dtype), slot, axis=-3)
+    # Validity mask: ring slots written so far (and inside the window).
+    n_seen = cache.pos + 1
+    valid = jnp.arange(size) < jnp.minimum(n_seen, size)
+    h, dh = q.shape[-2], q.shape[-1]
+    hkv, dv = kbuf.shape[-2], vbuf.shape[-1]
+    g = h // hkv
+    qg = q.reshape(*q.shape[:-2], hkv, g, dh)   # (..., Hkv, G, Dh)
+    kb = kbuf.astype(q.dtype)
+    vb = vbuf.astype(q.dtype)
+
+    if spec.kind in ("yat", "yat_spherical"):
+        if spec.kind == "yat_spherical":
+            from repro.core.features import normalize
+            qs, ks = normalize(qg), normalize(kb)
+            x = jnp.einsum("...kgd,...skd->...kgs", qs, ks)
+            scores = jnp.square(x) / (2.0 + 1e-3 - 2.0 * x)
+        else:
+            x = jnp.einsum("...kgd,...skd->...kgs", qg, kb)
+            q2 = jnp.sum(jnp.square(qg), -1)[..., None]        # (...,Hkv,G,1)
+            k2 = jnp.moveaxis(jnp.sum(jnp.square(kb), -1), -2, -1)[
+                ..., :, None, :]                               # (...,Hkv,1,S)
+            scores = jnp.square(x) / (jnp.maximum(q2 + k2 - 2 * x, 0.) + 1e-3)
+        scores = jnp.where(valid, scores, 0.0)
+        num = jnp.einsum("...kgs,...skd->...kgd", scores, vb)
+        den = jnp.sum(scores, axis=-1)[..., None] + 1e-6
+        y = (num / den).reshape(*q.shape[:-1], dv)
+        return y, AttnCache(kbuf, vbuf, n_seen, None, None)
+
+    logits = jnp.einsum("...kgd,...skd->...kgs", qg, kb) / jnp.sqrt(
+        jnp.asarray(dh, q.dtype))
+    if spec.logit_softcap:
+        logits = spec.logit_softcap * jnp.tanh(logits / spec.logit_softcap)
+    logits = jnp.where(valid, logits, jnp.finfo(logits.dtype).min)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), -1).astype(q.dtype)
+    y = jnp.einsum("...kgs,...skd->...kgd", probs, vb)
+    return y.reshape(*q.shape[:-1], dv), AttnCache(kbuf, vbuf, n_seen,
+                                                   None, None)
+
+
+def _features(spec: AttentionSpec, params: dict | None, u):
+    if spec.kind == "slay":
+        from repro.core.features import slay_features
+        return slay_features(u, params, spec.slay)
+    if spec.kind == "favor":
+        return bl.favor_features(u, params)
+    if spec.kind == "elu1":
+        return bl.elu1_features(u)
+    if spec.kind == "cosformer":
+        # Decode: position-dependent reweighting needs absolute positions;
+        # we use the large-M limit (cos ~ 1) for the single-token path.
+        return jnp.concatenate([jax.nn.relu(u), jnp.zeros_like(u)], axis=-1)
+    raise ValueError(spec.kind)

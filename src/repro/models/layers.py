@@ -1,0 +1,228 @@
+"""Shared neural-net layers: norms, RoPE, MLPs, MoE, embeddings.
+
+Pure functional: every layer is ``f(params_subtree, x, ...) -> y``. Parameter
+construction goes through :class:`ParamSpec` templates so that the same
+structural code yields (a) initialized arrays and (b) logical sharding axes
+(consumed by ``repro.distributed.sharding``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """Declarative parameter: shape + logical axes + initializer."""
+
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]   # logical axis names, len == len(shape)
+    init: str = "normal"           # normal | zeros | ones
+    scale: float | None = None     # stddev; default fan-in
+
+    def initialize(self, key: jax.Array, dtype) -> jnp.ndarray:
+        if self.init == "zeros":
+            return jnp.zeros(self.shape, dtype)
+        if self.init == "ones":
+            return jnp.ones(self.shape, dtype)
+        scale = self.scale
+        if scale is None:
+            fan_in = self.shape[-2] if len(self.shape) >= 2 else self.shape[-1]
+            scale = 1.0 / np.sqrt(max(fan_in, 1))
+        return (jax.random.normal(key, self.shape, jnp.float32)
+                * scale).astype(dtype)
+
+
+def realize(template, key: jax.Array, dtype) -> dict:
+    """Initialize a nested-dict template of ParamSpecs into arrays."""
+    leaves, treedef = jax.tree.flatten(
+        template, is_leaf=lambda x: isinstance(x, ParamSpec))
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree.unflatten(
+        treedef, [spec.initialize(k, dtype) for spec, k in zip(leaves, keys)])
+
+
+def axes_of(template) -> dict:
+    """Extract the logical-axes tree from a ParamSpec template."""
+    return jax.tree.map(lambda s: s.axes, template,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def stack_specs(template, n: int, axis_name: str = "layers"):
+    """Prefix every spec with a stacked leading dim (for scan-over-layers)."""
+    def _stack(s: ParamSpec) -> ParamSpec:
+        return ParamSpec((n, *s.shape), (axis_name, *s.axes), s.init, s.scale)
+    return jax.tree.map(_stack, template,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(scale: jnp.ndarray, x: jnp.ndarray, eps: float = 1e-6):
+    """RMSNorm with fp32 statistics (TPU mixed-precision practice)."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+            ).astype(x.dtype)
+
+
+def rmsnorm_spec(dim: int) -> ParamSpec:
+    return ParamSpec((dim,), ("embed",), init="zeros")
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float = 10000.0):
+    """Apply RoPE. x (..., L, H, Dh), positions (..., L) int32."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., L, half)
+    cos = jnp.cos(angles)[..., None, :]  # (..., L, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Dense MLP (SwiGLU / GELU)
+# ---------------------------------------------------------------------------
+
+
+def mlp_specs(d_model: int, d_ff: int, gated: bool = True) -> dict:
+    specs = {
+        "up": ParamSpec((d_model, d_ff), ("embed", "mlp")),
+        "down": ParamSpec((d_ff, d_model), ("mlp", "embed")),
+    }
+    if gated:
+        specs["gate"] = ParamSpec((d_model, d_ff), ("embed", "mlp"))
+    return specs
+
+
+def mlp(params: dict, x: jnp.ndarray, gated: bool = True,
+        activation: Callable = jax.nn.silu) -> jnp.ndarray:
+    from repro.distributed.sharding import constrain
+    hidden_axes = (("act_batch", "act_seq", "act_mlp") if x.ndim == 3
+                   else ("act_batch", "act_mlp"))
+    up = constrain(x @ params["up"], hidden_axes)
+    if gated:
+        up = activation(constrain(x @ params["gate"], hidden_axes)) * up
+    else:
+        up = activation(up)
+    return up @ params["down"]
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts (top-k, GShard-style one-hot dispatch)
+# ---------------------------------------------------------------------------
+
+
+def moe_specs(d_model: int, d_ff: int, num_experts: int) -> dict:
+    return {
+        "router": ParamSpec((d_model, num_experts), ("embed", None)),
+        "gate": ParamSpec((num_experts, d_model, d_ff),
+                          ("experts", "embed", "mlp")),
+        "up": ParamSpec((num_experts, d_model, d_ff),
+                        ("experts", "embed", "mlp")),
+        "down": ParamSpec((num_experts, d_ff, d_model),
+                          ("experts", "mlp", "embed")),
+    }
+
+
+def moe(params: dict, x: jnp.ndarray, num_experts: int, top_k: int = 2,
+        capacity_factor: float = 1.25,
+        seq_chunk: int = 4096) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Top-k MoE with capacity-bounded one-hot dispatch (GShard/Switch),
+    applied over sequence chunks.
+
+    x (..., S, d). Returns (y, aux_loss). The dispatch/combine tensors are
+    einsum-expressed so GSPMD partitions them cleanly (scatter/gather
+    routing was measured 1.5-7x WORSE on collectives under GSPMD — see
+    EXPERIMENTS.md §Perf grok iteration 2). Chunking the sequence bounds
+    the (G, S_c, E, C_c) dispatch tensors: at 32k tokens unchunked they
+    are tens of GiB; with 4k chunks they match the train-shape cost.
+    Capacity is enforced per chunk (stricter, never looser, than global).
+    """
+    *lead, s, d = x.shape
+    if s > seq_chunk and s % seq_chunk == 0:
+        n = s // seq_chunk
+        xc = x.reshape(*lead, n, seq_chunk, d)
+        xc = jnp.moveaxis(xc, len(lead), 0)        # (n, ..., S_c, d)
+
+        def one(xi):
+            return moe(params, xi, num_experts, top_k, capacity_factor,
+                       seq_chunk)
+
+        yc, aux = jax.lax.map(one, xc)
+        y = jnp.moveaxis(yc, 0, len(lead)).reshape(*lead, s, d)
+        return y, jnp.mean(aux)
+
+    xf = x.reshape(-1, s, d)                       # (G, S, d)
+    g = xf.shape[0]
+    e, k = num_experts, top_k
+    cap = max(int(capacity_factor * s * k / e), 1)
+
+    logits = jnp.einsum("gsd,de->gse", xf,
+                        params["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    # Load-balance auxiliary loss (Switch eq. 4).
+    density = jnp.mean(probs, axis=1)                              # (G, E)
+    top1 = jax.nn.one_hot(jnp.argmax(probs, -1), e, dtype=jnp.float32)
+    frac = jnp.mean(top1, axis=1)
+    aux = jnp.mean(jnp.sum(density * frac, axis=-1)) * e
+
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)                  # (G, S, k)
+    gate_vals = gate_vals / (jnp.sum(gate_vals, -1, keepdims=True) + 1e-9)
+
+    # Position within each expert queue, capacity-masked.
+    onehot = jax.nn.one_hot(gate_idx, e, dtype=jnp.float32)        # (G,S,k,E)
+    flat = onehot.reshape(g, s * k, e)
+    pos = jnp.cumsum(flat, axis=1) - flat                          # (G,S*k,E)
+    pos = pos.reshape(g, s, k, e)
+    keep = (pos < cap).astype(jnp.float32) * onehot
+    posc = jax.nn.one_hot(jnp.sum(pos * onehot, -1).astype(jnp.int32), cap,
+                          dtype=jnp.float32)                       # (G,S,k,C)
+    dispatch = jnp.einsum("gske,gskc->gsec", keep, posc)           # (G,S,E,C)
+    combine = jnp.einsum("gsec,gsk,gske->gsec", dispatch, gate_vals, onehot)
+
+    from repro.distributed.sharding import constrain
+    _exp = ("act_batch", "experts", None, None)
+    xe = constrain(jnp.einsum("gsec,gsd->gecd", dispatch.astype(x.dtype), xf),
+                   _exp)
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, params["gate"]))
+    h = h * jnp.einsum("gecd,edf->gecf", xe, params["up"])
+    ye = constrain(jnp.einsum("gecf,efd->gecd", h, params["down"]), _exp)
+    y = jnp.einsum("gsec,gecd->gsd", combine.astype(x.dtype), ye)
+    return y.reshape(*lead, s, d), aux
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def embed_spec(vocab: int, d_model: int) -> ParamSpec:
+    return ParamSpec((vocab, d_model), ("vocab", "embed"), scale=1.0)
+
+
+def embed(table: jnp.ndarray, tokens: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(table, tokens, axis=0)
+
+
+def unembed(table: jnp.ndarray, x: jnp.ndarray,
+            softcap: float = 0.0) -> jnp.ndarray:
+    logits = jnp.einsum("...d,vd->...v", x, table)
+    if softcap:
+        logits = softcap * jnp.tanh(logits / softcap)
+    return logits

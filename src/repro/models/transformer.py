@@ -1,0 +1,516 @@
+"""Unified decoder LM covering the dense / MoE / SSM / hybrid families.
+
+One parameterized implementation serves phi4-mini, qwen3, granite (MQA),
+gemma2 (local/global alternation + softcaps), hymba (parallel attn+mamba),
+mamba2 (attention-free), phi3.5-moe and grok-1 (top-2 MoE), and internvl2
+(vision-prefix stub). Layers are *stacked* and driven by ``lax.scan`` so the
+HLO stays O(1) in depth — essential for 64-80 layer dry-run compiles — and
+so XLA's latency-hiding scheduler can overlap layer-i compute with the
+weight all-gathers of layer i+1 under FSDP.
+
+The paper's SLAY mechanism is the default attention backend
+(cfg.attn_kind == "slay"); every mechanism in repro.models.attention can be
+swapped in via config without touching model code.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.ad_checkpoint import checkpoint_name
+
+from repro.configs.base import ArchConfig
+from repro.core.slay import AttentionSpec, slay_init
+from repro.distributed.sharding import constrain
+from repro.models import attention as attn
+from repro.models import ssm
+from repro.models.layers import (ParamSpec, axes_of, embed, embed_spec,
+                                 mlp, mlp_specs, moe, moe_specs, realize,
+                                 rmsnorm, rmsnorm_spec, rope, stack_specs,
+                                 unembed)
+
+
+# ---------------------------------------------------------------------------
+# Parameter templates
+# ---------------------------------------------------------------------------
+
+
+def attn_proj_specs(cfg: ArchConfig) -> dict:
+    dh = cfg.resolved_head_dim
+    t = {
+        "wq": ParamSpec((cfg.d_model, cfg.num_heads, dh),
+                        ("embed", "heads", None)),
+        "wk": ParamSpec((cfg.d_model, cfg.num_kv_heads, dh),
+                        ("embed", "kv_heads", None)),
+        "wv": ParamSpec((cfg.d_model, cfg.num_kv_heads, dh),
+                        ("embed", "kv_heads", None)),
+        "wo": ParamSpec((cfg.num_heads, dh, cfg.d_model),
+                        ("heads", None, "embed")),
+    }
+    if cfg.qk_norm:
+        t["q_norm"] = ParamSpec((dh,), (None,), init="zeros")
+        t["k_norm"] = ParamSpec((dh,), (None,), init="zeros")
+    return t
+
+
+def layer_specs(cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    if cfg.family == "ssm":
+        return {"pre": rmsnorm_spec(d),
+                "ssd": ssm.ssd_specs(d, cfg.ssm_state, cfg.ssm_expand,
+                                     cfg.ssm_head_dim, cfg.ssm_ngroups,
+                                     cfg.ssm_conv_width)}
+    t = {"pre_attn": rmsnorm_spec(d), "pre_mlp": rmsnorm_spec(d),
+         "attn": attn_proj_specs(cfg)}
+    if cfg.moe_experts:
+        t["moe"] = moe_specs(d, cfg.d_ff, cfg.moe_experts)
+    else:
+        t["mlp"] = mlp_specs(d, cfg.d_ff, cfg.gated_mlp)
+    if cfg.family == "hybrid":
+        t["ssd"] = ssm.ssd_specs(d, cfg.ssm_state, cfg.ssm_expand,
+                                 cfg.ssm_head_dim, cfg.ssm_ngroups,
+                                 cfg.ssm_conv_width)
+    return t
+
+
+def model_specs(cfg: ArchConfig) -> dict:
+    specs = {
+        "embed": embed_spec(cfg.vocab_size, cfg.d_model),
+        "final_norm": rmsnorm_spec(cfg.d_model),
+        "layers": stack_specs(layer_specs(cfg), cfg.num_layers),
+    }
+    if not cfg.tie_embeddings:
+        specs["unembed"] = ParamSpec((cfg.vocab_size, cfg.d_model),
+                                     ("vocab", "embed"), scale=1.0)
+    return specs
+
+
+def init_params(cfg: ArchConfig, key: jax.Array) -> dict:
+    k_model, k_slay = jax.random.split(key)
+    dtype = cfg.activation_dtype
+    params = realize(model_specs(cfg), k_model, dtype)
+    if cfg.family != "ssm" and cfg.attn_kind == "slay":
+        params["slay"] = slay_init(k_slay, cfg.slay_config())
+    elif cfg.family != "ssm" and cfg.attn_kind == "favor":
+        from repro.core.baselines import favor_init
+        params["slay"] = favor_init(k_slay, cfg.resolved_head_dim)
+    return params
+
+
+def param_axes(cfg: ArchConfig) -> dict:
+    axes = axes_of(model_specs(cfg))
+    if cfg.family != "ssm" and cfg.attn_kind in ("slay", "favor"):
+        # Random projections: tiny, replicated.
+        if cfg.attn_kind == "slay":
+            axes["slay"] = {"anchors": (None, None), "omegas": (None, None)}
+        else:
+            axes["slay"] = {"proj": (None, None)}
+    return axes
+
+
+def _layer_kinds(cfg: ArchConfig) -> np.ndarray:
+    """Per-layer flag: 1 = local sliding-window softmax, 0 = primary attn."""
+    if cfg.local_global_period and cfg.local_window:
+        idx = np.arange(cfg.num_layers)
+        return (idx % cfg.local_global_period
+                != cfg.local_global_period - 1).astype(np.int32)
+    return np.zeros(cfg.num_layers, np.int32)
+
+
+# ---------------------------------------------------------------------------
+# Forward (training / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _attn_full(cfg: ArchConfig, lp: dict, slay_params, x, positions,
+               is_local):
+    """One layer's attention over the full sequence."""
+    xa = rmsnorm(lp["pre_attn"], x)
+    _ahead = ("act_batch", "act_seq", "act_heads", None)
+    q = constrain(jnp.einsum("bld,dhk->blhk", xa, lp["attn"]["wq"]), _ahead)
+    k = constrain(jnp.einsum("bld,dhk->blhk", xa, lp["attn"]["wk"]), _ahead)
+    v = constrain(jnp.einsum("bld,dhk->blhk", xa, lp["attn"]["wv"]), _ahead)
+    if cfg.qk_norm:
+        q = rmsnorm(lp["attn"]["q_norm"], q)
+        k = rmsnorm(lp["attn"]["k_norm"], k)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    spec_g = cfg.attention_spec(local=False)
+    if cfg.local_global_period and cfg.local_window:
+        spec_l = cfg.attention_spec(local=True)
+        y = jax.lax.cond(
+            is_local == 1,
+            lambda: attn.full_attention(spec_l, None, q, k, v, causal=True),
+            lambda: attn.full_attention(spec_g, slay_params, q, k, v,
+                                        causal=True))
+    else:
+        y = attn.full_attention(spec_g, slay_params, q, k, v, causal=True)
+    y = constrain(y, _ahead)
+    return constrain(jnp.einsum("blhk,hkd->bld", y, lp["attn"]["wo"]),
+                     ("act_batch", "act_seq", "act_embed"))
+
+
+def _layer_fwd(cfg: ArchConfig, slay_params, carry, scanned):
+    x, aux = carry
+    lp, is_local, positions = scanned["params"], scanned["kind"], scanned["pos"]
+    if cfg.family == "ssm":
+        x = x + ssm.ssd_forward(
+            lp["ssd"], rmsnorm(lp["pre"], x), d_state=cfg.ssm_state,
+            expand=cfg.ssm_expand, head_dim=cfg.ssm_head_dim,
+            ngroups=cfg.ssm_ngroups, conv_width=cfg.ssm_conv_width,
+            chunk_size=cfg.chunk_size)
+        return (x, aux), None
+    x = constrain(x, ("act_batch", "act_seq", "act_embed"))
+    a = _attn_full(cfg, lp, slay_params, x, positions, is_local)
+    # Named for the save-collectives remat policy (§Perf): saving the
+    # post-all-reduce tensors lets the backward recompute skip re-running
+    # the forward TP collectives.
+    a = checkpoint_name(a, "attn_out")
+    if cfg.family == "hybrid":
+        # Hymba: parallel attention + mamba heads on the same input, averaged.
+        m = ssm.ssd_forward(
+            lp["ssd"], rmsnorm(lp["pre_attn"], x), d_state=cfg.ssm_state,
+            expand=cfg.ssm_expand, head_dim=cfg.ssm_head_dim,
+            ngroups=cfg.ssm_ngroups, conv_width=cfg.ssm_conv_width,
+            chunk_size=cfg.chunk_size)
+        a = 0.5 * (a + m)
+    x = x + a
+    xm = rmsnorm(lp["pre_mlp"], x)
+    if cfg.moe_experts:
+        y, moe_aux = moe(lp["moe"], xm, cfg.moe_experts, cfg.moe_top_k)
+        aux = aux + moe_aux
+    else:
+        y = mlp(lp["mlp"], xm, cfg.gated_mlp)
+    y = checkpoint_name(y, "mlp_out")
+    return (x + y, aux), None
+
+
+def forward(params: dict, cfg: ArchConfig, tokens: jnp.ndarray, *,
+            patch_embeds=None, remat: bool = False) -> tuple[jnp.ndarray,
+                                                             jnp.ndarray]:
+    """tokens (B, Lt) -> logits (B, L, V), aux loss. Vision prefix embeds
+    (B, P, d) are concatenated ahead of the token embeddings (stub frontend).
+    """
+    x = embed(params["embed"], tokens).astype(cfg.activation_dtype)
+    if patch_embeds is not None:
+        x = jnp.concatenate([patch_embeds.astype(x.dtype), x], axis=1)
+    x = constrain(x, ("act_batch", "act_seq", "act_embed"))
+    L = x.shape[1]
+    positions = jnp.arange(L, dtype=jnp.int32)[None, :]
+    slay_params = jax.lax.stop_gradient(params.get("slay"))
+    kinds = jnp.asarray(_layer_kinds(cfg))
+    pos_b = jnp.broadcast_to(positions, (cfg.num_layers, *positions.shape))
+
+    def body(carry, scanned):
+        return _layer_fwd(cfg, slay_params, carry, scanned)
+
+    if remat:
+        # remat may be True/"nothing" (recompute everything) or
+        # "save_collectives" (keep post-all-reduce layer outputs so the
+        # backward pass does not re-run the forward TP collectives).
+        if remat == "save_collectives":
+            policy = jax.checkpoint_policies.save_only_these_names(
+                "attn_out", "mlp_out")
+        else:
+            policy = jax.checkpoint_policies.nothing_saveable
+        body = jax.checkpoint(body, policy=policy)
+    (x, aux), _ = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)),
+        {"params": params["layers"], "kind": kinds, "pos": pos_b})
+    x = rmsnorm(params["final_norm"], x)
+    table = params.get("unembed", params["embed"])
+    logits = unembed(table, x, cfg.final_logit_softcap)
+    logits = constrain(logits, ("act_batch", "act_seq", "act_vocab"))
+    return logits, aux
+
+
+def loss_fn(params: dict, cfg: ArchConfig, batch: dict, *,
+            remat: bool = False) -> tuple[jnp.ndarray, dict]:
+    """Next-token cross-entropy (+ MoE load-balance aux)."""
+    logits, aux = forward(params, cfg, batch["tokens"],
+                          patch_embeds=batch.get("patch_embeds"),
+                          remat=remat)
+    labels = batch["labels"]
+    if logits.shape[1] != labels.shape[1]:   # vision prefix: text tail only
+        logits = logits[:, logits.shape[1] - labels.shape[1]:]
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = jnp.mean(logz - gold)
+    total = nll + 0.01 * aux
+    return total, {"nll": nll, "moe_aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode with stacked per-layer caches
+# ---------------------------------------------------------------------------
+
+
+class DecodeCache(NamedTuple):
+    """Stacked (num_layers leading) per-layer decode state."""
+
+    attn: attn.AttnCache | None
+    ssm: ssm.SsmState | None
+    pos: jnp.ndarray                # scalar int32 tokens generated
+
+
+def _needs_kv(cfg: ArchConfig, max_len: int) -> bool:
+    spec = cfg.attention_spec()
+    mixed_local = bool(cfg.local_global_period and cfg.local_window)
+    return (not spec.is_linear) or mixed_local
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int) -> DecodeCache:
+    """Allocate the decode cache (union layout when layers are mixed)."""
+    nl = cfg.num_layers
+    dh = cfg.resolved_head_dim
+    dtype = cfg.activation_dtype
+    a_cache = None
+    s_cache = None
+    if cfg.family != "ssm":
+        spec = cfg.attention_spec()
+        kv_len = (min(max_len, cfg.local_window)
+                  if cfg.local_window else max_len)
+        m = spec.slay.feature_dim if spec.kind == "slay" else \
+            attn._baseline_dim(spec, dh)
+        lin_needed = spec.is_linear
+        k = jnp.zeros((nl, batch, kv_len, cfg.num_kv_heads, dh), dtype) \
+            if _needs_kv(cfg, max_len) else None
+        v = jnp.zeros((nl, batch, kv_len, cfg.num_kv_heads, dh), dtype) \
+            if _needs_kv(cfg, max_len) else None
+        s = jnp.zeros((nl, batch, cfg.num_kv_heads, m, dh), jnp.float32) \
+            if lin_needed else None
+        z = jnp.zeros((nl, batch, cfg.num_kv_heads, m), jnp.float32) \
+            if lin_needed else None
+        a_cache = attn.AttnCache(k, v, jnp.zeros((nl,), jnp.int32), s, z)
+    if cfg.family in ("ssm", "hybrid"):
+        st = ssm.ssd_init_state((batch,), cfg.d_model, cfg.ssm_state,
+                                cfg.ssm_expand, cfg.ssm_head_dim,
+                                cfg.ssm_ngroups, cfg.ssm_conv_width)
+        s_cache = ssm.SsmState(jnp.zeros((nl, *st.h.shape), jnp.float32),
+                               jnp.zeros((nl, *st.conv.shape), jnp.float32))
+    return DecodeCache(a_cache, s_cache, jnp.zeros((), jnp.int32))
+
+
+def decode_step(params: dict, cfg: ArchConfig, cache: DecodeCache,
+                tokens: jnp.ndarray) -> tuple[jnp.ndarray, DecodeCache]:
+    """One autoregressive step. tokens (B, 1) -> logits (B, 1, V)."""
+    x = embed(params["embed"], tokens[:, 0]).astype(cfg.activation_dtype)
+    pos = cache.pos
+    slay_params = params.get("slay")
+    kinds = jnp.asarray(_layer_kinds(cfg))
+
+    def body(x, scanned):
+        lp = scanned["params"]
+        is_local = scanned["kind"]
+        new = {}
+        if cfg.family == "ssm":
+            y, st = ssm.ssd_decode_step(
+                lp["ssd"], rmsnorm(lp["pre"], x), scanned["ssm"],
+                d_state=cfg.ssm_state, expand=cfg.ssm_expand,
+                head_dim=cfg.ssm_head_dim, ngroups=cfg.ssm_ngroups,
+                conv_width=cfg.ssm_conv_width)
+            new["ssm"] = st
+            return x + y, new
+        xa = rmsnorm(lp["pre_attn"], x)
+        q = jnp.einsum("bd,dhk->bhk", xa, lp["attn"]["wq"])
+        k = jnp.einsum("bd,dhk->bhk", xa, lp["attn"]["wk"])
+        v = jnp.einsum("bd,dhk->bhk", xa, lp["attn"]["wv"])
+        if cfg.qk_norm:
+            q = rmsnorm(lp["attn"]["q_norm"], q)
+            k = rmsnorm(lp["attn"]["k_norm"], k)
+        p1 = pos[None, None]
+        q = rope(q[:, None], p1, cfg.rope_theta)[:, 0]
+        k = rope(k[:, None], p1, cfg.rope_theta)[:, 0]
+        spec_g = cfg.attention_spec(local=False)
+        ac = scanned["attn"]
+        if cfg.local_global_period and cfg.local_window:
+            spec_l = cfg.attention_spec(local=True)
+
+            def _local():
+                y, c = attn.decode_step(spec_l, None, q, k, v, ac)
+                return y, _merge_cache(ac, c)
+
+            def _global():
+                y, c = attn.decode_step(spec_g, slay_params, q, k, v, ac)
+                return y, _merge_cache(ac, c)
+
+            y, nac = jax.lax.cond(is_local == 1, _local, _global)
+        else:
+            y, nac = attn.decode_step(spec_g, slay_params, q, k, v, ac)
+        a = jnp.einsum("bhk,hkd->bd", y, lp["attn"]["wo"])
+        new["attn"] = nac
+        if cfg.family == "hybrid":
+            m, st = ssm.ssd_decode_step(
+                lp["ssd"], xa, scanned["ssm"], d_state=cfg.ssm_state,
+                expand=cfg.ssm_expand, head_dim=cfg.ssm_head_dim,
+                ngroups=cfg.ssm_ngroups, conv_width=cfg.ssm_conv_width)
+            a = 0.5 * (a + m)
+            new["ssm"] = st
+        x = x + a
+        xm = rmsnorm(lp["pre_mlp"], x)
+        if cfg.moe_experts:
+            y2, _ = moe(lp["moe"], xm[:, None, :], cfg.moe_experts,
+                        cfg.moe_top_k)
+            y2 = y2[:, 0]
+        else:
+            y2 = mlp(lp["mlp"], xm, cfg.gated_mlp)
+        return x + y2, new
+
+    scanned = {"params": params["layers"], "kind": kinds}
+    if cache.attn is not None:
+        scanned["attn"] = cache.attn
+    if cache.ssm is not None:
+        scanned["ssm"] = cache.ssm
+    x, new = jax.lax.scan(body, x, scanned)
+    x = rmsnorm(params["final_norm"], x)
+    table = params.get("unembed", params["embed"])
+    logits = unembed(table, x, cfg.final_logit_softcap)
+    return logits[:, None, :], DecodeCache(
+        new.get("attn"), new.get("ssm"), pos + 1)
+
+
+def prefill(params: dict, cfg: ArchConfig, tokens: jnp.ndarray, *,
+            patch_embeds=None,
+            max_len: int | None = None) -> tuple[jnp.ndarray, DecodeCache]:
+    """Process a full prompt; return last-token logits + a primed cache.
+
+    ``max_len`` sizes the KV ring buffer (prompt + headroom for generated
+    tokens); linear/SSM state paths are length-independent. Implemented as
+    forward for logits + per-layer cache construction in a second scan
+    (keeps the hot forward path allocation-free).
+    """
+    B = tokens.shape[0]
+    x = embed(params["embed"], tokens).astype(cfg.activation_dtype)
+    if patch_embeds is not None:
+        x = jnp.concatenate([patch_embeds.astype(x.dtype), x], axis=1)
+    L = x.shape[1]
+    positions = jnp.arange(L, dtype=jnp.int32)[None, :]
+    slay_params = params.get("slay")
+    kinds = jnp.asarray(_layer_kinds(cfg))
+    cache0 = init_cache(cfg, B, max(max_len or 0, L + 64))
+
+    def body(carry, scanned):
+        x, _aux = carry
+        lp, is_local = scanned["params"], scanned["kind"]
+        new = {}
+        if cfg.family == "ssm":
+            xn = rmsnorm(lp["pre"], x)
+            y = ssm.ssd_forward(
+                lp["ssd"], xn, d_state=cfg.ssm_state, expand=cfg.ssm_expand,
+                head_dim=cfg.ssm_head_dim, ngroups=cfg.ssm_ngroups,
+                conv_width=cfg.ssm_conv_width, chunk_size=cfg.chunk_size)
+            new["ssm"] = _ssd_prefill_state(cfg, lp["ssd"], xn)
+            return ((x + y, _aux), new)
+        x = constrain(x, ("act_batch", "act_seq", "act_embed"))
+        xa = rmsnorm(lp["pre_attn"], x)
+        _ahead = ("act_batch", "act_seq", "act_heads", None)
+        q = constrain(jnp.einsum("bld,dhk->blhk", xa, lp["attn"]["wq"]),
+                      _ahead)
+        k = constrain(jnp.einsum("bld,dhk->blhk", xa, lp["attn"]["wk"]),
+                      _ahead)
+        v = constrain(jnp.einsum("bld,dhk->blhk", xa, lp["attn"]["wv"]),
+                      _ahead)
+        if cfg.qk_norm:
+            q = rmsnorm(lp["attn"]["q_norm"], q)
+            k = rmsnorm(lp["attn"]["k_norm"], k)
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+        spec_g = cfg.attention_spec(local=False)
+        ac = scanned["attn"]
+        if cfg.local_global_period and cfg.local_window:
+            spec_l = cfg.attention_spec(local=True)
+
+            def _local():
+                y = attn.full_attention(spec_l, None, q, k, v)
+                c = attn.prefill_cache(spec_l, None, k, v, ac)
+                return y, _merge_cache(ac, c)
+
+            def _global():
+                y = attn.full_attention(spec_g, slay_params, q, k, v)
+                c = attn.prefill_cache(spec_g, slay_params, k, v, ac)
+                return y, _merge_cache(ac, c)
+
+            y, nac = jax.lax.cond(is_local == 1, _local, _global)
+        else:
+            y = attn.full_attention(spec_g, slay_params, q, k, v)
+            nac = _merge_cache(ac, attn.prefill_cache(spec_g, slay_params,
+                                                      k, v, ac))
+        y = constrain(y, _ahead)
+        a = constrain(jnp.einsum("blhk,hkd->bld", y, lp["attn"]["wo"]),
+                      ("act_batch", "act_seq", "act_embed"))
+        new["attn"] = nac
+        if cfg.family == "hybrid":
+            m = ssm.ssd_forward(
+                lp["ssd"], xa, d_state=cfg.ssm_state, expand=cfg.ssm_expand,
+                head_dim=cfg.ssm_head_dim, ngroups=cfg.ssm_ngroups,
+                conv_width=cfg.ssm_conv_width, chunk_size=cfg.chunk_size)
+            a = 0.5 * (a + m)
+            new["ssm"] = _ssd_prefill_state(cfg, lp["ssd"], xa)
+        x = x + a
+        xm = rmsnorm(lp["pre_mlp"], x)
+        if cfg.moe_experts:
+            y2, moe_aux = moe(lp["moe"], xm, cfg.moe_experts, cfg.moe_top_k)
+            _aux = _aux + moe_aux
+        else:
+            y2 = mlp(lp["mlp"], xm, cfg.gated_mlp)
+        return ((x + y2, _aux), new)
+
+    scanned = {"params": params["layers"], "kind": kinds}
+    if cache0.attn is not None:
+        scanned["attn"] = cache0.attn
+    if cache0.ssm is not None:
+        scanned["ssm"] = cache0.ssm
+    (x, _), new = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), scanned)
+    x = rmsnorm(params["final_norm"], x[:, -1])
+    table = params.get("unembed", params["embed"])
+    logits = unembed(table, x, cfg.final_logit_softcap)
+    return logits[:, None, :], DecodeCache(
+        new.get("attn"), new.get("ssm"), jnp.asarray(L, jnp.int32))
+
+
+def _merge_cache(template: attn.AttnCache, new: attn.AttnCache):
+    """Fill unused union-cache slots from the template so pytree structure
+    stays constant across mixed local/linear layers."""
+    return attn.AttnCache(
+        new.k if new.k is not None else template.k,
+        new.v if new.v is not None else template.v,
+        new.pos if new.pos is not None else template.pos,
+        new.s if new.s is not None else template.s,
+        new.z if new.z is not None else template.z,
+    )
+
+
+def _ssd_prefill_state(cfg: ArchConfig, lp: dict, xn: jnp.ndarray):
+    """Recompute the final SSD state for a prompt (prefill).
+
+    Runs the chunked scan again keeping only the carry — XLA CSEs this with
+    the forward pass when fused in the same jit.
+    """
+    d_model = xn.shape[-1]
+    z, xs, b, c, dt, d_inner, nheads = ssm._split_proj(
+        lp, xn, d_model, cfg.ssm_state, cfg.ssm_expand, cfg.ssm_head_dim,
+        cfg.ssm_ngroups)
+    full = jnp.concatenate([xs, b, c], -1)
+    xbc = ssm._causal_conv(lp, full, cfg.ssm_conv_width)
+    xs, b, c = jnp.split(xbc, [d_inner, d_inner + cfg.ssm_ngroups
+                               * cfg.ssm_state], -1)
+    B, L = xn.shape[0], xn.shape[1]
+    xh = xs.reshape(B, L, nheads, cfg.ssm_head_dim).astype(jnp.float32)
+    bh = b.reshape(B, L, cfg.ssm_ngroups, cfg.ssm_state).astype(jnp.float32)
+    dtp = jax.nn.softplus(dt.astype(jnp.float32)
+                          + lp["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(lp["a_log"].astype(jnp.float32))
+    la_ = dtp * a
+    # Final state: sum_u exp(sum_{t>u} la_t) dt_u x_u B_u^T
+    rev_cum = jnp.cumsum(la_[:, ::-1], axis=1)[:, ::-1] - la_  # tail sums
+    w = jnp.exp(rev_cum) * dtp                                  # (B,L,nh)
+    g = nheads // cfg.ssm_ngroups
+    bg = jnp.repeat(bh, g, axis=-2)
+    h = jnp.einsum("blhd,blhs->bhds", xh * w[..., None], bg)
+    conv = jax.lax.dynamic_slice_in_dim(
+        full, L - (cfg.ssm_conv_width - 1), cfg.ssm_conv_width - 1,
+        axis=1).astype(jnp.float32)            # (B, W-1, conv_dim)
+    return ssm.SsmState(h, conv)

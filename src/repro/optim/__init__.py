@@ -1,0 +1,3 @@
+"""Optimizers and distributed-optimization tricks."""
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update  # noqa
+from repro.optim import compress  # noqa: F401

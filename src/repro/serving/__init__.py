@@ -1,0 +1,2 @@
+"""Serving: batched prefill + decode over KV-cache or constant-state paths."""
+from repro.serving.engine import ServingEngine, jit_serve_fns  # noqa

@@ -1,0 +1,2 @@
+"""Training runtime: jit'd step builder + fault-tolerant loop."""
+from repro.train.loop import TrainConfig, Trainer, make_train_step  # noqa

@@ -1,0 +1,125 @@
+"""Exact quadratic kernels (Yat / spherical Yat / softmax) — paper Eq. 1/5,
+Props. 1/3, softcap + sliding window."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import kernels
+from repro.core.features import normalize
+
+
+def _qkv(key, B=1, L=8, H=2, d=16):
+    ks = jax.random.split(key, 3)
+    return (jax.random.normal(ks[0], (B, L, H, d)),
+            jax.random.normal(ks[1], (B, L, H, d)),
+            jax.random.normal(ks[2], (B, L, H, d)))
+
+
+def test_yat_equals_spherical_on_unit_inputs(key):
+    """On the sphere, ||q-k||^2 = 2-2x, so E == E_sph with the same eps."""
+    q, k, v = _qkv(key)
+    qn, kn = normalize(q), normalize(k)
+    s1 = kernels.yat_scores(qn, kn, eps=1e-2)
+    s2 = kernels.spherical_yat_scores(qn, kn, eps=1e-2)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=1e-4,
+                               rtol=1e-3)
+
+
+def test_spherical_scores_bounded(key):
+    q, k, _ = _qkv(key, L=32)
+    s = np.asarray(kernels.spherical_yat_scores(q, k, eps=1e-2))
+    assert np.all(s >= 0)
+    assert np.all(s <= 1.0 / 1e-2 + 1e-6)
+
+
+def test_kernel_normalized_attention_is_convex_combo(key):
+    q, k, v = _qkv(key, L=12)
+    scores = kernels.spherical_yat_scores(q, k)
+    y = np.asarray(kernels.kernel_normalized_attention(scores, v, causal=True))
+    vmin, vmax = np.asarray(v).min(), np.asarray(v).max()
+    assert np.all(y >= vmin - 1e-3) and np.all(y <= vmax + 1e-3)
+
+
+def test_softmax_attention_rows_sum_to_one(key):
+    q, k, v = _qkv(key, L=6)
+    ones = jnp.ones_like(v)
+    y = kernels.softmax_attention(q, k, ones, causal=True)
+    np.testing.assert_allclose(np.asarray(y), 1.0, atol=1e-5)
+
+
+def test_softmax_causality(key):
+    """Changing a future key/value must not affect earlier outputs."""
+    q, k, v = _qkv(key, L=8)
+    y1 = kernels.softmax_attention(q, k, v, causal=True)
+    k2 = k.at[:, -1].set(jax.random.normal(jax.random.PRNGKey(9), k[:, -1].shape))
+    v2 = v.at[:, -1].set(0.0)
+    y2 = kernels.softmax_attention(q, k2, v2, causal=True)
+    np.testing.assert_allclose(np.asarray(y1[:, :-1]), np.asarray(y2[:, :-1]),
+                               atol=1e-6)
+
+
+def test_yat_attention_causality(key):
+    q, k, v = _qkv(key, L=8)
+    y1 = kernels.yat_attention(q, k, v, causal=True, spherical=True)
+    v2 = v.at[:, -1].set(123.0)
+    y2 = kernels.yat_attention(q, k, v2, causal=True, spherical=True)
+    np.testing.assert_allclose(np.asarray(y1[:, :-1]), np.asarray(y2[:, :-1]),
+                               atol=1e-6)
+
+
+def test_sliding_window_masks_distant_tokens(key):
+    """A window-w attention must ignore keys further than w-1 back."""
+    q, k, v = _qkv(key, L=10)
+    w = 3
+    y = kernels.softmax_attention(q, k, v, causal=True, window=w)
+    # Recompute with the distant past zeroed out: same result.
+    L = 10
+    vmod = v
+    for t in range(L):
+        for s in range(0, max(0, t - w + 1)):
+            pass  # masked inside the op; compare against explicit mask below
+    logits = jnp.einsum("...qhd,...khd->...hqk", q, k) / jnp.sqrt(16.0)
+    qpos = jnp.arange(L)[:, None]
+    kpos = jnp.arange(L)[None, :]
+    mask = (qpos >= kpos) & (qpos - kpos < w)
+    logits = jnp.where(mask, logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    want = jnp.einsum("...hqk,...khd->...qhd", probs, vmod)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want), atol=1e-5)
+
+
+def test_logit_softcap_bounds_logits(key):
+    """Softcap keeps |logit| <= cap — outputs must differ from uncapped when
+    logits are large, and equal a direct tanh-capped computation."""
+    q, k, v = _qkv(key, L=6)
+    q = q * 10
+    cap = 5.0
+    y = kernels.softmax_attention(q, k, v, causal=False, logit_softcap=cap)
+    logits = jnp.einsum("...qhd,...khd->...hqk", q, k) / jnp.sqrt(16.0)
+    logits = cap * jnp.tanh(logits / cap)
+    probs = jax.nn.softmax(logits, axis=-1)
+    want = jnp.einsum("...hqk,...khd->...qhd", probs, v)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want), atol=1e-5)
+
+
+def test_banded_window_matches_masked_reference(key):
+    """Banded O(L·2w) sliding-window == full masked softmax attention."""
+    q, k, v = _qkv(key, L=24)
+    for w in (4, 8, 12):
+        got = kernels.windowed_softmax_attention(q, k, v, window=w)
+        logits = jnp.einsum("...qhd,...khd->...hqk", q, k) / jnp.sqrt(16.0)
+        qpos = jnp.arange(24)[:, None]
+        kpos = jnp.arange(24)[None, :]
+        mask = (qpos >= kpos) & (qpos - kpos < w)
+        logits = jnp.where(mask, logits, -jnp.inf)
+        probs = jax.nn.softmax(logits, axis=-1)
+        want = jnp.einsum("...hqk,...khd->...qhd", probs, v)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=2e-5, rtol=1e-4)
+
+
+def test_banded_window_with_softcap(key):
+    q, k, v = _qkv(key, L=16)
+    got = kernels.softmax_attention(q, k, v, causal=True, window=4,
+                                    logit_softcap=5.0)
+    assert np.all(np.isfinite(np.asarray(got)))

@@ -1,0 +1,155 @@
+"""Feature maps: PRF unbiasedness, polynomial variants, fused Ψ (paper §2.4)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import quadrature as qd
+from repro.core.features import (SlayFeatureConfig, init_feature_params,
+                                 normalize, poly_features, prf_features,
+                                 slay_features)
+
+
+def _unit(key, n, d):
+    return normalize(jax.random.normal(key, (n, d)))
+
+
+def test_normalize_unit_norm(key):
+    u = jax.random.normal(key, (32, 16)) * 10.0
+    n = normalize(u)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(n), axis=-1), 1.0,
+                               atol=1e-3)
+
+
+def test_normalize_stable_at_zero():
+    out = normalize(jnp.zeros((4, 8)))
+    assert np.all(np.isfinite(np.asarray(out)))
+
+
+def test_prf_unbiasedness(key):
+    """Prop. 2: E[<phi(q;s), phi(k;s)>] = e^{2s q^T k} on the sphere."""
+    d, D = 16, 60000
+    q = _unit(jax.random.PRNGKey(1), 4, d)
+    k = _unit(jax.random.PRNGKey(2), 4, d)
+    omegas = jax.random.normal(key, (D, d))
+    for s in (0.1, 0.5, 1.0):
+        fq = prf_features(q, omegas, jnp.asarray(s))
+        fk = prf_features(k, omegas, jnp.asarray(s))
+        est = np.asarray(jnp.einsum("im,jm->ij", fq, fk))
+        x = np.asarray(jnp.einsum("id,jd->ij", q, k))
+        exact = np.exp(2 * s * x)
+        np.testing.assert_allclose(est, exact, rtol=0.12)
+
+
+def test_prf_strictly_positive(key):
+    u = _unit(key, 8, 16)
+    omegas = jax.random.normal(jax.random.PRNGKey(3), (32, 16))
+    f = prf_features(u, omegas, jnp.asarray([0.2, 1.0]))
+    assert f.shape == (8, 2, 32)
+    assert np.all(np.asarray(f) > 0)
+
+
+def test_exact_poly_reconstructs_squared_dot(key):
+    d = 12
+    cfg = SlayFeatureConfig(head_dim=d, poly_kind="exact")
+    params = init_feature_params(key, cfg)
+    q = _unit(jax.random.PRNGKey(1), 6, d)
+    k = _unit(jax.random.PRNGKey(2), 6, d)
+    fq, fk = poly_features(q, params, cfg), poly_features(k, params, cfg)
+    est = np.asarray(jnp.einsum("im,jm->ij", fq, fk))
+    x = np.asarray(jnp.einsum("id,jd->ij", q, k))
+    np.testing.assert_allclose(est, x**2, atol=1e-5)
+
+
+def test_anchor_features_nonnegative_inner_products(key):
+    """Table 1: anchor features guarantee <phi(x),phi(y)> >= 0."""
+    cfg = SlayFeatureConfig(head_dim=16, num_anchors=8)
+    params = init_feature_params(key, cfg)
+    q = _unit(jax.random.PRNGKey(1), 16, 16)
+    k = _unit(jax.random.PRNGKey(2), 16, 16)
+    fq, fk = poly_features(q, params, cfg), poly_features(k, params, cfg)
+    est = np.asarray(jnp.einsum("im,jm->ij", fq, fk))
+    assert np.all(est >= 0)
+
+
+def test_rm_unbiased_for_squared_dot(key):
+    """Random Maclaurin is unbiased (App. C) but signed."""
+    d, P = 8, 40000
+    cfg = SlayFeatureConfig(head_dim=d, num_anchors=P, poly_kind="rm")
+    params = init_feature_params(key, cfg)
+    q = _unit(jax.random.PRNGKey(1), 4, d)
+    k = _unit(jax.random.PRNGKey(2), 4, d)
+    fq, fk = poly_features(q, params, cfg), poly_features(k, params, cfg)
+    est = np.asarray(jnp.einsum("im,jm->ij", fq, fk))
+    x = np.asarray(jnp.einsum("id,jd->ij", q, k))
+    np.testing.assert_allclose(est, x**2, atol=0.05)
+
+
+@pytest.mark.parametrize("poly", ["anchor", "exact", "rm", "nystrom",
+                                  "tensorsketch"])
+def test_poly_variant_shapes(poly, key):
+    cfg = SlayFeatureConfig(head_dim=8, num_anchors=6, poly_kind=poly)
+    params = init_feature_params(key, cfg)
+    u = _unit(jax.random.PRNGKey(1), 10, 8)
+    f = poly_features(u, params, cfg)
+    assert f.shape == (10, cfg.poly_dim)
+    assert np.all(np.isfinite(np.asarray(f)))
+
+
+@pytest.mark.parametrize("fusion", ["tensor", "hadamard", "subsample"])
+def test_fused_feature_shapes(fusion, key):
+    cfg = SlayFeatureConfig(head_dim=8, num_anchors=4, num_prf=6,
+                            num_quad_nodes=3, fusion=fusion,
+                            sketch_dim=12 if fusion == "subsample" else 0)
+    params = init_feature_params(key, cfg)
+    u = jax.random.normal(jax.random.PRNGKey(1), (2, 5, 8))
+    f = slay_features(u, params, cfg)
+    assert f.shape == (2, 5, cfg.feature_dim)
+    assert np.all(np.isfinite(np.asarray(f)))
+
+
+def test_slay_feature_inner_products_nonnegative(key):
+    """§G: anchor poly x positive PRF x nonneg quadrature weights => the
+    estimated kernel (and hence attention denominators) are nonnegative."""
+    cfg = SlayFeatureConfig(head_dim=16)
+    params = init_feature_params(key, cfg)
+    q = jax.random.normal(jax.random.PRNGKey(1), (32, 16))
+    k = jax.random.normal(jax.random.PRNGKey(2), (32, 16))
+    fq, fk = slay_features(q, params, cfg), slay_features(k, params, cfg)
+    est = np.asarray(jnp.einsum("im,jm->ij", fq, fk))
+    assert np.all(est >= 0)
+
+
+def test_slay_estimates_quadrature_kernel(key):
+    """With the exact poly map and a large PRF budget, <Ψ(q),Ψ(k)> matches
+    the R-node quadrature kernel (Remark 1/2: unbiased for the discretized
+    kernel)."""
+    d, R = 16, 4
+    cfg = SlayFeatureConfig(head_dim=d, poly_kind="exact", num_prf=4096,
+                            num_quad_nodes=R, eps=1e-1)
+    params = init_feature_params(key, cfg)
+    q = _unit(jax.random.PRNGKey(1), 6, d)
+    k = _unit(jax.random.PRNGKey(2), 6, d)
+    fq, fk = slay_features(q, params, cfg), slay_features(k, params, cfg)
+    est = np.asarray(jnp.einsum("im,jm->ij", fq, fk))
+    x = np.asarray(jnp.einsum("id,jd->ij", q, k))
+    quad = qd.quadrature_kernel(x, R, 1e-1)
+    err = np.abs(est - quad) / (np.abs(quad) + 1e-3)
+    assert np.median(err) < 0.25
+
+
+def test_subsample_fusion_approximates_tensor(key):
+    cfg_full = SlayFeatureConfig(head_dim=8, num_anchors=8, num_prf=16)
+    cfg_sub = SlayFeatureConfig(head_dim=8, num_anchors=8, num_prf=16,
+                                fusion="subsample", sketch_dim=96)
+    params = init_feature_params(key, cfg_sub)
+    q = _unit(jax.random.PRNGKey(1), 8, 8)
+    k = _unit(jax.random.PRNGKey(2), 8, 8)
+    full = np.asarray(jnp.einsum(
+        "im,jm->ij", slay_features(q, params, cfg_full),
+        slay_features(k, params, cfg_full)))
+    sub = np.asarray(jnp.einsum(
+        "im,jm->ij", slay_features(q, params, cfg_sub),
+        slay_features(k, params, cfg_sub)))
+    # Subsampled Kronecker is an unbiased sketch: close on average.
+    assert np.abs(sub - full).mean() < 0.5 * np.abs(full).mean() + 1e-6

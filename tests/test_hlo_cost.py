@@ -1,0 +1,92 @@
+"""HLO cost-model parser: trip counts, dot flops, collective wire factors.
+Pure text-level tests (no devices) + one end-to-end jit cross-check."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch import hlo_cost
+
+SYNTH = """
+HloModule test
+
+%body (p: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+  %p = (s32[], f32[8,16]{1,0}) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,16]{1,0} get-tuple-element(%p), index=1
+  %w = f32[16,16]{1,0} constant({...})
+  %y = f32[8,16]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,16]{1,0} all-reduce(%y), replica_groups=[2,4]<=[8], to_apply=%add
+  %one = s32[] constant(1)
+  %i2 = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[8,16]{1,0}) tuple(%i2, %ar)
+}
+
+%cond (p: (s32[], f32[8,16])) -> pred[] {
+  %p = (s32[], f32[8,16]{1,0}) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(10)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+ENTRY %main (a: f32[8,16]) -> f32[8,16] {
+  %a = f32[8,16]{1,0} parameter(0)
+  %z = s32[] constant(0)
+  %t0 = (s32[], f32[8,16]{1,0}) tuple(%z, %a)
+  %w = (s32[], f32[8,16]{1,0}) while(%t0), condition=%cond, body=%body
+  ROOT %out = f32[8,16]{1,0} get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_while_trip_count_scales_flops():
+    t = hlo_cost.analyze(SYNTH)
+    # dot: 2*8*16*16 = 4096 flops, x10 trips.
+    assert t.flops == 10 * 2 * 8 * 16 * 16
+
+
+def test_all_reduce_wire_factor():
+    t = hlo_cost.analyze(SYNTH)
+    # group size 4 -> 2*(3/4)*8*16*4B = 3072 bytes, x10.
+    np.testing.assert_allclose(t.coll_wire_bytes, 10 * 2 * 0.75 * 8 * 16 * 4)
+    assert set(t.coll_by_kind) == {"all-reduce"}
+
+
+def test_group_size_parsing():
+    assert hlo_cost._group_size("replica_groups=[2,4]<=[8]") == 4
+    assert hlo_cost._group_size("replica_groups=[16,32]<=[2,16,16]T(1,0,2)") \
+        == 32
+    assert hlo_cost._group_size("replica_groups={{0,1,2,3},{4,5,6,7}}") == 4
+    assert hlo_cost._group_size("no groups here", default=7) == 7
+
+
+def test_shape_bytes():
+    assert hlo_cost._shape_bytes("f32[8,16]{1,0}") == 8 * 16 * 4
+    assert hlo_cost._shape_bytes("bf16[3]") == 6
+    assert hlo_cost._shape_bytes("(f32[2], bf16[4]{0})") == 8 + 8
+    assert hlo_cost._shape_bytes("pred[]") == 1
+
+
+def test_end_to_end_scan_flop_count():
+    """Cross-check the parser against a jit'd scan with known FLOPs on the
+    real (single-device) backend."""
+    M, K, N, T = 8, 32, 64, 7
+    w = jnp.zeros((K, N))
+    x = jnp.zeros((M, K))
+
+    def f(w, x):
+        def body(c, _):
+            return jnp.tanh(c @ w @ w.T), ()
+        y, _ = jax.lax.scan(body, x, None, length=T)
+        return y
+
+    comp = jax.jit(f).lower(w, x).compile()
+    t = hlo_cost.analyze(comp.as_text())
+    want = T * (2 * M * N * K + 2 * M * K * N)
+    np.testing.assert_allclose(t.flops, want, rtol=0.01)
+
+
+def test_memory_counts_dot_traffic():
+    t = hlo_cost.analyze(SYNTH)
+    # per iter: dot reads x(512B)+w(1024B), writes 512B; all-reduce in+out.
+    per_iter = (512 + 1024 + 512) + (512 + 512)
+    assert t.hbm_bytes == 10 * per_iter

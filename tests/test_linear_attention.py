@@ -1,0 +1,133 @@
+"""Linear-attention contractions (paper Eq. 11 / Algorithm 1):
+chunk invariance, causal==quadratic oracle, decode==prefix, GQA grouping."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import linear_attention as la
+
+
+def _rand_features(key, B, L, H, m, positive=True):
+    x = jax.random.uniform(key, (B, L, H, m)) if positive else \
+        jax.random.normal(key, (B, L, H, m))
+    return x
+
+
+def _naive_causal(qf, kf, v, delta=1e-6):
+    """O(L^2) reference: scores = qf kf^T, causal-masked, kernel-normalized.
+    qf (B,L,H,m), kf (B,L,Hkv,m), v (B,L,Hkv,dv)."""
+    B, L, H, m = qf.shape
+    hkv = kf.shape[-2]
+    g = H // hkv
+    kfr = jnp.repeat(kf, g, axis=-2)
+    vr = jnp.repeat(v, g, axis=-2)
+    scores = jnp.einsum("blhm,bshm->bhls", qf, kfr)
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    scores = jnp.where(mask, scores, 0.0)
+    num = jnp.einsum("bhls,bshd->blhd", scores, vr)
+    den = jnp.sum(scores, axis=-1).swapaxes(-1, -2)[..., None]
+    return num / (den + delta)
+
+
+@pytest.mark.parametrize("chunk", [2, 4, 8, 32])
+def test_causal_chunked_matches_naive(chunk, key):
+    B, L, H, hkv, m, dv = 2, 32, 4, 2, 12, 8
+    qf = _rand_features(jax.random.PRNGKey(1), B, L, H, m)
+    kf = _rand_features(jax.random.PRNGKey(2), B, L, hkv, m)
+    v = jax.random.normal(jax.random.PRNGKey(3), (B, L, hkv, dv))
+    got = la.causal_chunked(qf, kf, v, chunk_size=chunk)
+    want = _naive_causal(qf, kf, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=1e-4)
+
+
+def test_chunk_size_invariance(key):
+    B, L, H, m, dv = 1, 24, 2, 8, 4
+    qf = _rand_features(jax.random.PRNGKey(1), B, L, H, m)
+    kf = _rand_features(jax.random.PRNGKey(2), B, L, H, m)
+    v = jax.random.normal(jax.random.PRNGKey(3), (B, L, H, dv))
+    outs = [la.causal_chunked(qf, kf, v, chunk_size=c) for c in (3, 8, 24)]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o),
+                                   atol=2e-5)
+
+
+def test_padding_path(key):
+    """L not divisible by chunk: zero-padding must not change the output."""
+    B, L, H, m, dv = 1, 19, 2, 8, 4
+    qf = _rand_features(jax.random.PRNGKey(1), B, L, H, m)
+    kf = _rand_features(jax.random.PRNGKey(2), B, L, H, m)
+    v = jax.random.normal(jax.random.PRNGKey(3), (B, L, H, dv))
+    got = la.causal_chunked(qf, kf, v, chunk_size=8)
+    want = _naive_causal(qf, kf, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+def test_noncausal_matches_quadratic(key):
+    B, L, Lk, H, m, dv = 2, 8, 12, 4, 6, 5
+    qf = _rand_features(jax.random.PRNGKey(1), B, L, H, m)
+    kf = _rand_features(jax.random.PRNGKey(2), B, Lk, H, m)
+    v = jax.random.normal(jax.random.PRNGKey(3), (B, Lk, H, dv))
+    got = la.noncausal(qf, kf, v)
+    scores = jnp.einsum("blhm,bshm->bhls", qf, kf)
+    num = jnp.einsum("bhls,bshd->blhd", scores, v)
+    den = jnp.sum(scores, -1).swapaxes(-1, -2)[..., None]
+    want = num / (den + 1e-6)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5,
+                               rtol=1e-4)
+
+
+def test_decode_steps_match_full_causal(key):
+    """Token-by-token decode must reproduce each causal row."""
+    B, L, H, hkv, m, dv = 1, 10, 4, 2, 6, 4
+    qf = _rand_features(jax.random.PRNGKey(1), B, L, H, m)
+    kf = _rand_features(jax.random.PRNGKey(2), B, L, hkv, m)
+    v = jax.random.normal(jax.random.PRNGKey(3), (B, L, hkv, dv))
+    full = la.causal_chunked(qf, kf, v, chunk_size=5)
+    state = la.init_state((B,), hkv, m, dv)
+    for t in range(L):
+        y, state = la.decode_step(qf[:, t], kf[:, t], v[:, t], state)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(full[:, t]),
+                                   atol=3e-5, rtol=1e-4)
+
+
+def test_prefill_state_then_decode(key):
+    """prefill_state(prompt) + decode(next) == causal at position L."""
+    B, L, hkv, m, dv = 2, 12, 2, 6, 4
+    kf = _rand_features(jax.random.PRNGKey(2), B, L + 1, hkv, m)
+    v = jax.random.normal(jax.random.PRNGKey(3), (B, L + 1, hkv, dv))
+    qf = _rand_features(jax.random.PRNGKey(1), B, L + 1, hkv, m)
+    st = la.prefill_state(kf[:, :L], v[:, :L])
+    y, _ = la.decode_step(qf[:, L], kf[:, L], v[:, L], st)
+    full = la.causal_chunked(qf, kf, v, chunk_size=13)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(full[:, L]),
+                               atol=3e-5, rtol=1e-4)
+
+
+def test_gqa_grouping_equivalence(key):
+    """GQA (Hkv < H) must equal explicitly repeating kv to all heads."""
+    B, L, H, hkv, m, dv = 1, 16, 6, 3, 5, 4
+    qf = _rand_features(jax.random.PRNGKey(1), B, L, H, m)
+    kf = _rand_features(jax.random.PRNGKey(2), B, L, hkv, m)
+    v = jax.random.normal(jax.random.PRNGKey(3), (B, L, hkv, dv))
+    got = la.causal_chunked(qf, kf, v, chunk_size=8)
+    kfr = jnp.repeat(kf, H // hkv, axis=-2)
+    vr = jnp.repeat(v, H // hkv, axis=-2)
+    want = la.causal_chunked(qf, kfr, vr, chunk_size=8)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+def test_output_in_value_hull_for_nonneg_features(key):
+    """With nonnegative features the attention output is a convex
+    combination of values (up to the +delta shrinkage): coordinates lie in
+    [min v, max v] componentwise."""
+    B, L, H, m, dv = 1, 20, 2, 8, 3
+    qf = _rand_features(jax.random.PRNGKey(1), B, L, H, m) + 0.1
+    kf = _rand_features(jax.random.PRNGKey(2), B, L, H, m) + 0.1
+    v = jax.random.normal(jax.random.PRNGKey(3), (B, L, H, dv))
+    out = np.asarray(la.causal_chunked(qf, kf, v, chunk_size=4))
+    vmin = np.asarray(v).min(axis=(0, 1, 2))
+    vmax = np.asarray(v).max(axis=(0, 1, 2))
+    assert np.all(out >= vmin - 1e-3)
+    assert np.all(out <= vmax + 1e-3)

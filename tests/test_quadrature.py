@@ -1,0 +1,72 @@
+"""Gauss-Laguerre quadrature of the Bernstein/Laplace representation
+(paper §2.4.1, App. E/J/L.3)."""
+import numpy as np
+import pytest
+
+from repro.core import quadrature as qd
+
+
+def test_nodes_weights_integrate_one():
+    # ∫ e^{-t} dt = 1  -> weights sum to 1.
+    for r in (1, 2, 3, 8, 16):
+        _, a = qd.laguerre_nodes(r)
+        np.testing.assert_allclose(a.sum(), 1.0, rtol=1e-12)
+
+
+def test_scaled_rule_reproduces_1_over_c():
+    # ∫ e^{-Cs} ds = 1/C exactly for any R >= 1 (h == x^2 e^{2sx} with x=0
+    # is not this; use h == 1).
+    for eps in (1e-3, 1e-1, 1.0):
+        c = 2.0 + eps
+        s, w = qd.yat_quadrature(4, eps)
+        np.testing.assert_allclose(np.sum(w), 1.0 / c, rtol=1e-12)
+
+
+def test_quadrature_converges_to_kernel():
+    """Error decreases with R and is small away from the x->1 boundary
+    (paper Fig. 9: exponential convergence for smooth integrands)."""
+    x = np.linspace(-1.0, 0.9, 101)
+    exact = qd.exact_spherical_yat(x, 1e-1)
+    errs = []
+    for r in (1, 2, 4, 8, 16, 32):
+        approx = qd.quadrature_kernel(x, r, 1e-1)
+        errs.append(np.max(np.abs(approx - exact)))
+    # monotone (weakly) decreasing and small at R=32
+    assert errs[-1] < 2e-3
+    assert errs[-1] < errs[0] / 50
+
+
+def test_quadrature_kernel_nonnegative():
+    x = np.linspace(-1, 1, 201)
+    for r in (1, 3, 8):
+        assert np.all(qd.quadrature_kernel(x, r, 1e-3) >= 0.0)
+
+
+def test_exact_kernel_bounds():
+    # Proposition 3: 0 <= E_sph <= 1/eps, max at x=1.
+    x = np.linspace(-1, 1, 2001)
+    for eps in (1e-3, 1e-2, 1.0):
+        k = qd.exact_spherical_yat(x, eps)
+        assert np.all(k >= 0)
+        assert np.all(k <= 1.0 / eps + 1e-9)
+        np.testing.assert_allclose(k[-1], 1.0 / eps, rtol=1e-9)
+
+
+def test_invalid_args_raise():
+    with pytest.raises(ValueError):
+        qd.yat_quadrature(0, 1e-3)
+    with pytest.raises(ValueError):
+        qd.yat_quadrature(3, 0.0)
+
+
+def test_exact_kernel_positive_definite_gram():
+    """Theorem 2: E_sph is PD on the sphere — Gram matrices of random unit
+    vectors must be PSD (up to numerical tolerance)."""
+    rng = np.random.default_rng(7)
+    for d in (2, 4, 16):
+        u = rng.normal(size=(24, d))
+        u /= np.linalg.norm(u, axis=1, keepdims=True)
+        x = u @ u.T
+        gram = qd.exact_spherical_yat(np.clip(x, -1, 1), 1e-2)
+        evals = np.linalg.eigvalsh(gram)
+        assert evals.min() > -1e-8 * max(1.0, evals.max())
