@@ -1,0 +1,145 @@
+"""Kernel benchmark: fused megakernel vs two-dispatch vs jnp, fwd and fwd+bwd.
+
+Times the three SLAY causal-attention execution paths across sequence
+lengths and emits ``BENCH_kernels.json`` (repo root) so subsequent PRs have
+a perf trajectory:
+
+* ``fused``     — `kernels.slay_fused`: Ψ computed in VMEM inside the
+                  attention kernel; zero feature HBM traffic by construction.
+* ``two_dispatch`` — `kernels.feature_map` then `kernels.slay_scan` with the
+                  Ψ(Q)/Ψ(K) round-trip through HBM in between.
+* ``jnp``       — the `repro.core` reference (XLA-fused, no Pallas).
+
+Each path is timed forward-only and forward+backward (`jax.grad` w.r.t.
+q, k, v — the Pallas paths differentiate through their custom VJPs).
+
+Besides wall-clock, every row carries an analytic HBM-roofline accounting
+(`roofline` key): bytes of per-head feature traffic (`psi_hbm_bytes` —
+exactly 0 for the fused path) and total per-pass tensor traffic, from the
+model in DESIGN.md §3. On CPU the kernels run in interpret mode — absolute
+times are meaningless there; the JSON structure and the roofline numbers
+are backend-independent.
+
+    PYTHONPATH=src python -m benchmarks.run --suite kernels
+    PYTHONPATH=src python -m benchmarks.run --suite kernels --full  # TPU sweep
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import BenchResult, time_fn
+from repro.core import linear_attention as la
+from repro.core.features import (SlayFeatureConfig, init_feature_params,
+                                 slay_features)
+from repro.kernels import feature_map, slay_fused, slay_scan
+
+_JSON_PATH = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_kernels.json")
+
+# Quick: CPU interpret mode (structure / trajectory); full: paper-style
+# sweep L ∈ 1k…64k for TPU runs.
+_QUICK_LS = (256, 512)
+_FULL_LS = (1_024, 4_096, 16_384, 65_536)
+
+
+def _roofline(bh: int, bk: int, L: int, d: int, dv: int, m: int,
+              path: str) -> dict:
+    """Analytic HBM bytes per forward pass (fp32). DESIGN.md §3.
+
+    Common traffic: read q (bh·L·d), k/v (bk·L·(d+dv)), write y (bh·L·dv).
+    The two-dispatch path additionally WRITES Ψ(Q)/Ψ(K) ((bh+bk)·L·m) from
+    the feature kernel and re-READS them in the scan kernel. The fused path
+    never materializes Ψ in HBM: psi bytes ≡ 0 by construction.
+    """
+    f32 = 4
+    io = (bh * L * d + bk * L * (d + dv) + bh * L * dv) * f32
+    # two_dispatch and jnp both pay the round-trip (XLA materializes the
+    # features across the scan boundary too); only fused avoids it.
+    psi = 0 if path == "fused" else 2 * (bh + bk) * L * m * f32
+    return {"io_hbm_bytes": io, "psi_hbm_bytes": psi,
+            "total_hbm_bytes": io + psi}
+
+
+def run(quick: bool = True):
+    interpret = jax.default_backend() != "tpu"
+    Ls = _QUICK_LS if quick else _FULL_LS
+    bh, bk = 4, 2
+    d = dv = 64
+    chunk = 128
+    cfg = SlayFeatureConfig(head_dim=d, num_anchors=8, num_prf=16,
+                            num_quad_nodes=3)  # m = 384
+    m = cfg.feature_dim
+    params = init_feature_params(jax.random.PRNGKey(0), cfg)
+    anchors, omegas = params["anchors"], params["omegas"]
+
+    def fused_fwd(q, k, v):
+        return slay_fused.fused_causal_attention(
+            q, k, v, anchors, omegas, cfg, chunk_size=chunk,
+            interpret=interpret)
+
+    def two_dispatch_fwd(q, k, v):
+        qf = feature_map.slay_feature_map(
+            q.reshape(-1, d), anchors, omegas, cfg, block_tokens=chunk,
+            interpret=interpret).reshape(bh, -1, m)
+        kf = feature_map.slay_feature_map(
+            k.reshape(-1, d), anchors, omegas, cfg, block_tokens=chunk,
+            interpret=interpret).reshape(bk, -1, m)
+        return slay_scan.causal_linear_attention(
+            qf, kf, v, chunk_size=chunk, interpret=interpret)
+
+    def jnp_fwd(q, k, v):
+        g = bh // bk
+        qf = slay_features(q, params, cfg)
+        kf = slay_features(k, params, cfg)
+        qq = qf.reshape(bk, g, qf.shape[1], m).transpose(0, 2, 1, 3)
+        y = la.causal_chunked(qq, kf[:, :, None, :], v[:, :, None, :],
+                              chunk_size=chunk)
+        return y.transpose(0, 2, 1, 3).reshape(bh, -1, dv)
+
+    paths = {"fused": fused_fwd, "two_dispatch": two_dispatch_fwd,
+             "jnp": jnp_fwd}
+    results = []
+    rows = []
+    for L in Ls:
+        kq, kk, kv = jax.random.split(jax.random.PRNGKey(L), 3)
+        q = jax.random.normal(kq, (bh, L, d))
+        k = jax.random.normal(kk, (bk, L, d))
+        v = jax.random.normal(kv, (bk, L, dv))
+        for name, fn in paths.items():
+            fwd = jax.jit(fn)
+            grad = jax.jit(jax.grad(
+                lambda q, k, v, f=fn: jnp.sum(f(q, k, v)),
+                argnums=(0, 1, 2)))
+            t_fwd = time_fn(fwd, q, k, v, warmup=1, iters=3)
+            t_fb = time_fn(grad, q, k, v, warmup=1, iters=3)
+            roof = _roofline(bh, bk, L, d, dv, m, name)
+            for phase, t in (("fwd", t_fwd), ("fwd_bwd", t_fb)):
+                results.append(BenchResult(
+                    f"kernels/{name}/{phase}/L{L}", t, "ms",
+                    extra={"L": L, "path": name, "phase": phase,
+                           "roofline": roof}))
+            rows.append({"L": L, "path": name, "fwd_ms": t_fwd,
+                         "fwd_bwd_ms": t_fb, **roof})
+
+    payload = {
+        "meta": {
+            "backend": jax.default_backend(),
+            "interpret": interpret,
+            "quick": quick,
+            "shape": {"bh": bh, "bk": bk, "d": d, "dv": dv, "m": m,
+                      "chunk": chunk, "P": cfg.num_anchors,
+                      "D": cfg.num_prf, "R": cfg.num_quad_nodes},
+            "note": ("interpret-mode timings are structural only; "
+                     "psi_hbm_bytes is the analytic feature round-trip "
+                     "(0 for fused — Ψ never leaves VMEM)"),
+        },
+        "results": rows,
+    }
+    with open(_JSON_PATH, "w") as f:
+        json.dump(payload, f, indent=1)
+        f.write("\n")
+    return results

@@ -3,6 +3,7 @@
     PYTHONPATH=src python -m benchmarks.run              # quick suite
     PYTHONPATH=src python -m benchmarks.run --full       # paper-scale sweep
     PYTHONPATH=src python -m benchmarks.run --only table2,fig9
+    PYTHONPATH=src python -m benchmarks.run --suite kernels   # kernel bench
 
 Prints ``name,value,unit`` CSV lines and writes results/benchmarks.json.
 """
@@ -20,11 +21,14 @@ def main(argv=None) -> int:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma-separated module keys (table2,fig2,...)")
+    ap.add_argument("--suite", default=None,
+                    help="named suite group: paper (default set) | kernels")
     args = ap.parse_args(argv)
 
-    from benchmarks import (fig2_scaling, fig9_quadrature, roofline_report,
-                            table2_poly_approx, table3_synthetic,
-                            table4_extreme, table5_slayformer)
+    from benchmarks import (fig2_scaling, fig9_quadrature, kernel_bench,
+                            roofline_report, table2_poly_approx,
+                            table3_synthetic, table4_extreme,
+                            table5_slayformer)
     suites = {
         "table2": table2_poly_approx,
         "fig2": fig2_scaling,
@@ -33,8 +37,22 @@ def main(argv=None) -> int:
         "table4": table4_extreme,
         "table5": table5_slayformer,
         "roofline": roofline_report,
+        "kernels": kernel_bench,
     }
+    # The kernel bench is opt-in (it is its own suite group); the default /
+    # "paper" group runs everything else.
+    groups = {"paper": set(suites) - {"kernels"}, "kernels": {"kernels"}}
     only = set(args.only.split(",")) if args.only else None
+    if args.suite:
+        if args.suite not in groups:
+            ap.error(f"unknown --suite {args.suite!r} "
+                     f"(choose from {sorted(groups)})")
+        only = groups[args.suite] if only is None else only & groups[args.suite]
+        if not only:
+            ap.error(f"--only {args.only!r} selects nothing inside "
+                     f"--suite {args.suite!r}")
+    elif only is None:
+        only = groups["paper"]
     all_results = []
     for key, mod in suites.items():
         if only and key not in only:

@@ -21,7 +21,33 @@ import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard
+
+import zlib
+
+try:  # zstd preferred; fall back to stdlib zlib where the wheel is absent.
+    import zstandard
+except ImportError:  # pragma: no cover - environment dependent
+    zstandard = None
+
+_ZSTD_MAGIC = b"\x28\xb5\x2f\xfd"
+
+
+def _compress(payload: bytes) -> bytes:
+    if zstandard is not None:
+        return zstandard.ZstdCompressor(level=3).compress(payload)
+    return zlib.compress(payload, 3)
+
+
+def _decompress(blob: bytes) -> bytes:
+    # Sniff the frame magic so checkpoints stay readable across
+    # environments that differ in zstandard availability.
+    if blob[:4] == _ZSTD_MAGIC:
+        if zstandard is None:
+            raise RuntimeError(
+                "checkpoint is zstd-compressed but the zstandard module "
+                "is not installed in this environment")
+        return zstandard.ZstdDecompressor().decompress(blob)
+    return zlib.decompress(blob)
 
 
 def _flatten(tree) -> dict:
@@ -38,7 +64,7 @@ def _flatten(tree) -> dict:
 def save_checkpoint(ckpt_dir: str, step: int, tree, *, keep: int = 3) -> str:
     os.makedirs(ckpt_dir, exist_ok=True)
     payload = msgpack.packb({"step": step, "arrays": _flatten(tree)})
-    blob = zstandard.ZstdCompressor(level=3).compress(payload)
+    blob = _compress(payload)
     tmp = os.path.join(ckpt_dir, f"tmp.{step}")
     final = os.path.join(ckpt_dir, f"step_{step:08d}.ckpt")
     with open(tmp, "wb") as f:
@@ -68,8 +94,7 @@ def restore_checkpoint(path: str, tree_like, *, shardings=None):
     """Restore into the structure of `tree_like`; optional target shardings
     (pytree of NamedSharding) for elastic resume onto a new mesh."""
     with open(path, "rb") as f:
-        payload = msgpack.unpackb(zstandard.ZstdDecompressor()
-                                  .decompress(f.read()))
+        payload = msgpack.unpackb(_decompress(f.read()))
     arrays = payload["arrays"]
     leaves_p, treedef = jax.tree_util.tree_flatten_with_path(tree_like)
     shard_leaves = (jax.tree.leaves(shardings)

@@ -64,6 +64,12 @@ class ArchConfig:
     slay_prf: int = 16
     slay_quad_nodes: int = 3
     chunk_size: int = 256
+    # Pallas attention kernels (trainable — the kernels carry custom VJPs).
+    # use_pallas dispatches the compiled kernels on TPU (jnp reference
+    # elsewhere); fuse_attention_features selects the end-to-end megakernel
+    # over the two-dispatch feature→scan pipeline.
+    use_pallas: bool = False
+    fuse_attention_features: bool = True
     # Numerics
     dtype: str = "bfloat16"
     # Source provenance (public-literature citation)
@@ -92,7 +98,9 @@ class ArchConfig:
                                  chunk_size=self.chunk_size)
         if self.attn_kind == "slay":
             return AttentionSpec(kind="slay", slay=self.slay_config(),
-                                 chunk_size=self.chunk_size)
+                                 chunk_size=self.chunk_size,
+                                 use_pallas=self.use_pallas,
+                                 fuse_features=self.fuse_attention_features)
         return AttentionSpec(kind=self.attn_kind,
                              logit_softcap=self.attn_logit_softcap,
                              chunk_size=self.chunk_size,

@@ -34,15 +34,31 @@ def slay_init(key: jax.Array, cfg: SlayConfig) -> dict:
 
 def slay_attention(params: dict, q, k, v, cfg: SlayConfig, *,
                    causal: bool = True, chunk_size: int = 256,
-                   delta: float = 1e-6, use_kernel: bool = False):
-    """Full-sequence SLAY attention (training / prefill)."""
+                   delta: float = 1e-6, use_kernel: bool = False,
+                   fuse_features: bool = True,
+                   interpret: bool | None = None):
+    """Full-sequence SLAY attention (training / prefill).
+
+    ``use_kernel`` selects the Pallas path (differentiable — the kernels
+    carry custom VJPs, so this works under ``jax.grad``). With
+    ``fuse_features`` (default) the causal path runs the end-to-end
+    megakernel on raw q/k: Ψ(Q)/Ψ(K) are computed in VMEM and never hit
+    HBM. ``fuse_features=False`` keeps the two-dispatch path (feature
+    kernel → HBM → scan kernel) for A/B benchmarking.
+    """
+    if causal and use_kernel:
+        from repro.kernels import ops  # lazy: pallas import
+        if fuse_features:
+            return ops.slay_fused_attention(
+                q, k, v, params, cfg, chunk_size=chunk_size, delta=delta,
+                interpret=interpret)
+        qf = ops.slay_features(q, params, cfg, interpret=interpret)
+        kf = ops.slay_features(k, params, cfg, interpret=interpret)
+        return ops.slay_causal_attention(qf, kf, v, chunk_size=chunk_size,
+                                         delta=delta, interpret=interpret)
     qf = slay_features(q, params, cfg)
     kf = slay_features(k, params, cfg)
     if causal:
-        if use_kernel:
-            from repro.kernels import ops  # lazy: pallas import
-            return ops.slay_causal_attention(qf, kf, v, chunk_size=chunk_size,
-                                             delta=delta)
         return la.causal_chunked(qf, kf, v, chunk_size=chunk_size, delta=delta)
     return la.noncausal(qf, kf, v, delta=delta)
 
@@ -78,6 +94,10 @@ class AttentionSpec:
     logit_softcap: float = 0.0
     chunk_size: int = 256
     use_pallas: bool = False
+    # With use_pallas: run the end-to-end megakernel (Ψ fused into the
+    # attention scan, zero feature HBM traffic) instead of the two-dispatch
+    # feature-kernel → scan-kernel pipeline.
+    fuse_features: bool = True
 
     @property
     def is_linear(self) -> bool:

@@ -1,7 +1,11 @@
 """Pallas TPU kernels for SLAY's compute hot-spots.
 
-* ``slay_scan``    — chunked causal linear attention, VMEM running state.
+* ``slay_fused``   — end-to-end megakernel: Ψ + chunked causal attention in
+                     one pass, custom VJP (features never touch HBM).
+* ``slay_scan``    — chunked causal linear attention on precomputed
+                     features, VMEM running state, custom VJP.
 * ``feature_map``  — fused normalize→poly→PRF→Kronecker feature pipeline.
+* ``decode_step``  — one-token serving step, in-place state, custom VJP.
 * ``ops``          — jit'd layout-adapting wrappers (public entry points).
 * ``ref``          — pure-jnp oracles (match ``repro.core``).
 """

@@ -15,10 +15,16 @@ matvec / reduction kernels. The state buffers are donated
 
 Grid: (BK,) — one program per kv head; the G query heads of that kv head
 are processed together as a (G, m) x (m, dv) MXU matmul.
+
+Differentiable: the public entry point carries a custom VJP so the decode
+step composes with `jax.grad` (e.g. RL-style losses over generated tokens).
+The backward is O(m·dv) closed-form math on one token — far below Pallas
+dispatch granularity — so it is plain jnp (DESIGN.md §3).
 """
 from __future__ import annotations
 
 import functools
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -41,19 +47,38 @@ def _kernel(qf_ref, kf_ref, v_ref, s_ref, z_ref, y_ref, s_out, z_out, *,
     z_out[0] = z
 
 
+class DecodeStatics(NamedTuple):
+    delta: float
+    interpret: bool
+
+
 @functools.partial(jax.jit, static_argnames=("delta", "interpret"))
 def decode_linear_attention(qf: jnp.ndarray, kf: jnp.ndarray, v: jnp.ndarray,
                             s: jnp.ndarray, z: jnp.ndarray, *,
                             delta: float = 1e-6,
                             interpret: bool = False):
     """qf (BH, m), kf (BK, m), v (BK, dv), s (BK, m, dv) f32, z (BK, m) f32
-    -> (y (BH, dv), s', z'). BH must be a multiple of BK (GQA)."""
+    -> (y (BH, dv), s', z'). BH must be a multiple of BK (GQA).
+    Differentiable (custom VJP)."""
     bh, m = qf.shape
-    bk, dv = v.shape
+    bk = v.shape[0]
     if bh % bk:
         raise ValueError(f"q rows {bh} not divisible by kv rows {bk}")
+    st = DecodeStatics(delta=delta, interpret=interpret)
+    return _decode(st, qf, kf, v, s, z)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _decode(st: DecodeStatics, qf, kf, v, s, z):
+    return _decode_impl(st, qf, kf, v, s, z)
+
+
+def _decode_impl(st: DecodeStatics, qf, kf, v, s, z):
+    bh, m = qf.shape
+    bk, dv = v.shape
     g = bh // bk
     qg = qf.reshape(bk, g, m)
+    delta, interpret = st.delta, st.interpret
 
     y, s2, z2 = pl.pallas_call(
         functools.partial(_kernel, delta=delta),
@@ -79,3 +104,44 @@ def decode_linear_attention(qf: jnp.ndarray, kf: jnp.ndarray, v: jnp.ndarray,
         interpret=interpret,
     )(qg, kf, v, s, z)
     return y.reshape(bh, dv), s2, z2
+
+
+def _decode_fwd(st: DecodeStatics, qf, kf, v, s, z):
+    y, s2, z2 = _decode_impl(st, qf, kf, v, s, z)
+    # NOTE: s/z are donated to s2/z2 by the kernel; save the *updated* state
+    # (s2 = s + kfᵀv, z2 = z + kf) and the inputs needed to reconstruct.
+    return (y, s2, z2), (qf, kf, v, s2, z2, y)
+
+
+def _decode_bwd(st: DecodeStatics, res, cts):
+    """Closed-form one-token backward (jnp; below kernel granularity).
+
+    y_g = (q_g S') / (q_g z' + δ) with S' = S + kᵀv, z' = z + k.
+    Cotangents arrive for all three outputs (y, S', z').
+    """
+    qf, kf, v, s2, z2, y = res
+    dy, ds2_in, dz2_in = cts
+    bh, m = qf.shape
+    bk, dv = v.shape
+    g = bh // bk
+    f32 = jnp.float32
+    qg = qf.reshape(bk, g, m).astype(f32)
+    dyg = dy.reshape(bk, g, dv).astype(f32)
+    yg = y.reshape(bk, g, dv).astype(f32)
+    den = jnp.einsum("kgm,km->kg", qg, z2) + st.delta          # (bk, g)
+    gg = dyg / den[..., None]                                  # dnum
+    hh = -jnp.sum(dyg * yg, axis=-1) / den                     # dden (bk, g)
+    dqg = (jnp.einsum("kgd,kmd->kgm", gg, s2)
+           + hh[..., None] * z2[:, None, :])
+    ds2 = ds2_in.astype(f32) + jnp.einsum("kgm,kgd->kmd", qg, gg)
+    dz2 = dz2_in.astype(f32) + jnp.einsum("kgm,kg->km", qg, hh)
+    # S' = S + kfᵀ v, z' = z + kf.
+    vf = v.astype(f32)
+    kff = kf.astype(f32)
+    dkf = jnp.einsum("kmd,kd->km", ds2, vf) + dz2
+    dvv = jnp.einsum("km,kmd->kd", kff, ds2)
+    return (dqg.reshape(bh, m).astype(qf.dtype), dkf.astype(kf.dtype),
+            dvv.astype(v.dtype), ds2, dz2)
+
+
+_decode.defvjp(_decode_fwd, _decode_bwd)

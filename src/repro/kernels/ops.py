@@ -2,8 +2,15 @@
 
 Model code calls these; they translate between the model's
 (..., L, H, feat) layout and the kernels' head-major (BH, L, feat) layout,
-and fall back to the jnp reference on non-TPU backends (interpret mode is
-used for correctness tests, not production CPU execution).
+zero-pad ragged lengths to block multiples (zero features contribute
+nothing to the running state, matching ``core.linear_attention``), and fall
+back to the jnp reference on non-TPU backends.
+
+``interpret`` semantics (uniform across wrappers):
+    None  — compiled kernel on TPU, jnp reference elsewhere (production).
+    False — same as None: "compiled kernel if available"; an explicit False
+            never forces an interpret-mode kernel onto CPU.
+    True  — interpret-mode kernel on any backend (correctness tests).
 """
 from __future__ import annotations
 
@@ -13,11 +20,57 @@ import jax.numpy as jnp
 from repro.core.features import SlayFeatureConfig
 from repro.kernels import feature_map as _fm
 from repro.kernels import ref as _ref
+from repro.kernels import slay_fused as _fused
 from repro.kernels import slay_scan as _scan
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def _use_kernel(interpret: bool | None) -> bool:
+    """Kernel-vs-reference dispatch for the ``interpret`` tri-state."""
+    if interpret is True:
+        return True
+    return _on_tpu()
+
+
+def _pad_len(L: int, block: int) -> int:
+    return (block - L % block) % block
+
+
+def _headmajor_call(kernel_fn, q, k, v, *, chunk_size: int):
+    """Run a head-major (BH, L, feat) kernel from the model layout.
+
+    q (..., L, H, dq), k (..., L, Hkv, dk), v (..., L, Hkv, dv)
+    -> (..., L, H, dv). Zero-pads ragged L to a chunk multiple (zero
+    features contribute nothing to the running state) and maps q heads
+    group-major so q row i reads kv row i // g, matching the kernels'
+    index maps.
+    """
+    *lead, L, H, dq = q.shape
+    hkv, dk, dv = k.shape[-2], k.shape[-1], v.shape[-1]
+    g = H // hkv
+    b = 1
+    for x in lead:
+        b *= x
+    pad = _pad_len(L, chunk_size)
+    if pad:
+        padding = [(0, 0)] * len(lead) + [(0, pad), (0, 0), (0, 0)]
+        q = jnp.pad(q, padding)
+        k = jnp.pad(k, padding)
+        v = jnp.pad(v, padding)
+    Lp = L + pad
+    qh = (q.reshape(b, Lp, hkv, g, dq).transpose(0, 2, 3, 1, 4)
+          .reshape(b * hkv * g, Lp, dq))
+    kh = k.reshape(b, Lp, hkv, dk).transpose(0, 2, 1, 3).reshape(
+        b * hkv, Lp, dk)
+    vh = v.reshape(b, Lp, hkv, dv).transpose(0, 2, 1, 3).reshape(
+        b * hkv, Lp, dv)
+    yh = kernel_fn(qh, kh, vh)
+    y = (yh.reshape(b, hkv, g, Lp, dv).transpose(0, 3, 1, 2, 4)
+         .reshape(*lead, Lp, H, dv))
+    return y[..., :L, :, :] if pad else y
 
 
 def slay_causal_attention(qf: jnp.ndarray, kf: jnp.ndarray, v: jnp.ndarray,
@@ -26,47 +79,71 @@ def slay_causal_attention(qf: jnp.ndarray, kf: jnp.ndarray, v: jnp.ndarray,
     """Causal linear attention on fused features.
 
     qf (..., L, H, m), kf (..., L, Hkv, m), v (..., L, Hkv, dv)
-    -> (..., L, H, dv).
+    -> (..., L, H, dv). L may be ragged — zero-padded to a chunk multiple
+    (zero features contribute nothing to the running state).
     """
-    *lead, L, H, m = qf.shape
-    hkv, dv = kf.shape[-2], v.shape[-1]
-    g = H // hkv
-    b = 1
-    for x in lead:
-        b *= x
-    # (..., L, H, m) -> (B*Hkv*G, L, m): group-major so q row i reads kv
-    # row i // g, matching the kernel's index map.
-    qh = (qf.reshape(b, L, hkv, g, m).transpose(0, 2, 3, 1, 4)
-          .reshape(b * hkv * g, L, m))
-    kh = kf.reshape(b, L, hkv, m).transpose(0, 2, 1, 3).reshape(b * hkv, L, m)
-    vh = v.reshape(b, L, hkv, dv).transpose(0, 2, 1, 3).reshape(b * hkv, L, dv)
-
-    use_kernel = _on_tpu() if interpret is None else True
-    if use_kernel:
-        yh = _scan.causal_linear_attention(
+    if not _use_kernel(interpret):
+        from repro.core import linear_attention as la
+        return la.causal_chunked(qf, kf, v, chunk_size=chunk_size,
+                                 delta=delta)
+    return _headmajor_call(
+        lambda qh, kh, vh: _scan.causal_linear_attention(
             qh, kh, vh, chunk_size=chunk_size, delta=delta,
-            interpret=bool(interpret))
-    else:
-        yh = _ref.causal_linear_attention_ref(
-            qh, kh, vh, chunk_size=chunk_size, delta=delta)
-    y = (yh.reshape(b, hkv, g, L, dv).transpose(0, 3, 1, 2, 4)
-         .reshape(*lead, L, H, dv))
-    return y
+            interpret=bool(interpret)),
+        qf, kf, v, chunk_size=chunk_size)
+
+
+def slay_fused_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                         params: dict, cfg: SlayFeatureConfig, *,
+                         chunk_size: int = 256, delta: float = 1e-6,
+                         interpret: bool | None = None) -> jnp.ndarray:
+    """End-to-end SLAY causal attention on **raw** q/k (no HBM features).
+
+    q (..., L, H, d), k (..., L, Hkv, d), v (..., L, Hkv, dv)
+    -> (..., L, H, dv). Ψ is computed inside the megakernel; the only
+    per-token HBM traffic is the raw O(L·d) q/k/v reads and the O(L·dv)
+    output write. Differentiable (custom VJP); ragged L is zero-padded.
+
+    Falls back to the jnp reference (features + chunked scan) off-TPU or
+    for non-kernelizable feature configs.
+    """
+    kernelizable = (cfg.poly_kind == "anchor" and cfg.fusion == "tensor")
+    if not (_use_kernel(interpret) and kernelizable):
+        from repro.core import linear_attention as la
+        from repro.core.features import slay_features
+        qf = slay_features(q, params, cfg)
+        kf = slay_features(k, params, cfg)
+        return la.causal_chunked(qf, kf, v, chunk_size=chunk_size,
+                                 delta=delta)
+    return _headmajor_call(
+        lambda qh, kh, vh: _fused.fused_causal_attention(
+            qh, kh, vh, params["anchors"], params["omegas"], cfg,
+            chunk_size=chunk_size, delta=delta, interpret=bool(interpret)),
+        q, k, v, chunk_size=chunk_size)
 
 
 def slay_features(u: jnp.ndarray, params: dict, cfg: SlayFeatureConfig, *,
                   block_tokens: int = 256,
                   interpret: bool | None = None) -> jnp.ndarray:
-    """Fused Ψ(u) over the trailing dim; u (..., d) -> (..., m)."""
-    use_kernel = (_on_tpu() if interpret is None else True)
+    """Fused Ψ(u) over the trailing dim; u (..., d) -> (..., m).
+
+    Ragged token counts are zero-padded to a block multiple and sliced
+    (Ψ(0) = 0 for the anchor map, so padding is inert downstream).
+    """
     kernelizable = (cfg.poly_kind == "anchor" and cfg.fusion == "tensor")
     *lead, d = u.shape
     n = 1
     for x in lead:
         n *= x
-    if use_kernel and kernelizable and n % block_tokens == 0:
-        out = _fm.slay_feature_map(
-            u.reshape(n, d), params["anchors"], params["omegas"], cfg,
-            block_tokens=block_tokens, interpret=bool(interpret))
-        return out.reshape(*lead, cfg.feature_dim)
-    return _ref.slay_features_ref(u, params, cfg)
+    if not (_use_kernel(interpret) and kernelizable and n > 0):
+        return _ref.slay_features_ref(u, params, cfg)
+    pad = _pad_len(n, block_tokens)
+    uf = u.reshape(n, d)
+    if pad:
+        uf = jnp.pad(uf, ((0, pad), (0, 0)))
+    out = _fm.slay_feature_map(
+        uf, params["anchors"], params["omegas"], cfg,
+        block_tokens=block_tokens, interpret=bool(interpret))
+    if pad:
+        out = out[:n]
+    return out.reshape(*lead, cfg.feature_dim)

@@ -85,7 +85,8 @@ def full_attention(spec: AttentionSpec, params: dict | None, q, k, v, *,
     if spec.kind == "slay":
         return slay_mod.slay_attention(
             params, q, k, v, spec.slay, causal=causal,
-            chunk_size=spec.chunk_size, use_kernel=spec.use_pallas)
+            chunk_size=spec.chunk_size, use_kernel=spec.use_pallas,
+            fuse_features=spec.fuse_features)
     return bl.linear_baseline_attention(
         spec.kind, params, q, k, v, causal=causal, chunk_size=spec.chunk_size)
 

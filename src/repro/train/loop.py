@@ -32,10 +32,27 @@ from repro.optim.adamw import AdamWConfig, AdamWState, adamw_init, adamw_update
 log = logging.getLogger("repro.train")
 
 
+def resolve_attention_path(cfg: ArchConfig,
+                           train_cfg: "TrainConfig") -> ArchConfig:
+    """Apply the TrainConfig attention-kernel overrides to the arch config."""
+    updates = {}
+    if train_cfg.use_pallas is not None:
+        updates["use_pallas"] = train_cfg.use_pallas
+    if train_cfg.fuse_attention_features is not None:
+        updates["fuse_attention_features"] = train_cfg.fuse_attention_features
+    return dataclasses.replace(cfg, **updates) if updates else cfg
+
+
 @dataclasses.dataclass(frozen=True)
 class TrainConfig:
     microbatches: int = 1            # grad-accumulation steps
     remat: bool = True
+    # Attention-kernel override for the training step. None = respect
+    # cfg.use_pallas; True/False force the Pallas / jnp attention path.
+    # The Pallas kernels carry custom VJPs (DESIGN.md §3), so use_pallas
+    # training steps differentiate end to end — no inference-only fallback.
+    use_pallas: bool | None = None
+    fuse_attention_features: bool | None = None
     # "nothing" = nothing_saveable; "save_collectives" saves the named
     # post-all-reduce tensors (attn_out/mlp_out) so the backward recompute
     # skips re-running the forward TP collectives (§Perf).
@@ -51,6 +68,7 @@ def make_train_step(cfg: ArchConfig, opt_cfg: AdamWConfig,
                     train_cfg: TrainConfig):
     """Returns train_step(params, opt_state, ef_state, batch) -> (...)"""
 
+    cfg = resolve_attention_path(cfg, train_cfg)
     remat_arg = (train_cfg.remat_policy
                  if (train_cfg.remat and train_cfg.remat_policy != "nothing")
                  else train_cfg.remat)

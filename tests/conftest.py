@@ -18,3 +18,6 @@ def key():
 
 def pytest_configure(config):
     config.addinivalue_line("markers", "slow: long-running integration test")
+    config.addinivalue_line(
+        "markers",
+        "kernels: interpret-mode Pallas kernel tests (pytest -m kernels)")

@@ -1,0 +1,342 @@
+"""Fused SLAY megakernel + custom VJPs vs jax.grad through the jnp oracles.
+
+All Pallas calls run interpret=True on CPU. Forward parity covers GQA group
+sizes and ragged (non-chunk-multiple) lengths through the padding wrappers;
+gradient parity checks every differentiable input of every kernel against
+autodiff through the mathematically-audited ``repro.core`` references.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import linear_attention as la
+from repro.core.features import (SlayFeatureConfig, init_feature_params,
+                                 slay_features)
+from repro.core.slay import slay_attention
+from repro.kernels import decode_step as dk
+from repro.kernels import ops, ref, slay_fused, slay_scan
+
+pytestmark = pytest.mark.kernels
+
+ATOL, RTOL = 2e-4, 2e-4
+
+
+def _cfg(d=16, P=4, D=8, R=2):
+    return SlayFeatureConfig(head_dim=d, num_anchors=P, num_prf=D,
+                             num_quad_nodes=R)
+
+
+def _inputs(key, bh, bk, L, d, dv):
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (bh, L, d))
+    k = jax.random.normal(kk, (bk, L, d))
+    v = jax.random.normal(kv, (bk, L, dv))
+    return q, k, v
+
+
+def _oracle_headmajor(q, k, v, params, cfg, chunk):
+    """Fused-attention oracle in the kernel's head-major layout."""
+    bh, L, _ = q.shape
+    bk, _, dv = v.shape
+    g = bh // bk
+    qf = slay_features(q, params, cfg)
+    kf = slay_features(k, params, cfg)
+    qq = qf.reshape(bk, g, L, -1).transpose(0, 2, 1, 3)
+    y = la.causal_chunked(qq, kf[:, :, None, :], v[:, :, None, :],
+                          chunk_size=chunk)
+    return y.transpose(0, 2, 1, 3).reshape(bh, L, dv)
+
+
+# ---------------------------------------------------------------------------
+# Fused megakernel: forward parity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("bh,bk,L,d,dv,chunk", [
+    (4, 2, 32, 16, 8, 8),      # GQA g=2
+    (2, 2, 32, 16, 16, 16),    # MHA
+    (6, 1, 48, 24, 8, 16),     # MQA g=6
+    (8, 4, 64, 32, 32, 32),    # bigger
+])
+def test_fused_forward_matches_oracle(bh, bk, L, d, dv, chunk):
+    cfg = _cfg(d=d)
+    params = init_feature_params(jax.random.PRNGKey(0), cfg)
+    q, k, v = _inputs(jax.random.PRNGKey(1), bh, bk, L, d, dv)
+    got = slay_fused.fused_causal_attention(
+        q, k, v, params["anchors"], params["omegas"], cfg,
+        chunk_size=chunk, interpret=True)
+    want = _oracle_headmajor(q, k, v, params, cfg, chunk)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=ATOL, rtol=RTOL)
+
+
+@pytest.mark.parametrize("g", [1, 2, 4])
+@pytest.mark.parametrize("L", [17, 31, 64])
+def test_fused_wrapper_gqa_and_ragged_lengths(g, L):
+    """ops.slay_fused_attention: model layout, padding, GQA group sizes."""
+    B, hkv, d, dv, chunk = 2, 2, 16, 16, 16
+    H = hkv * g
+    cfg = _cfg(d=d)
+    params = init_feature_params(jax.random.PRNGKey(0), cfg)
+    q = jax.random.normal(jax.random.PRNGKey(1), (B, L, H, d))
+    k = jax.random.normal(jax.random.PRNGKey(2), (B, L, hkv, d))
+    v = jax.random.normal(jax.random.PRNGKey(3), (B, L, hkv, dv))
+    got = ops.slay_fused_attention(q, k, v, params, cfg, chunk_size=chunk,
+                                   interpret=True)
+    qf = slay_features(q, params, cfg)
+    kf = slay_features(k, params, cfg)
+    want = la.causal_chunked(qf, kf, v, chunk_size=chunk)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=ATOL, rtol=RTOL)
+
+
+@pytest.mark.parametrize("fuse", [True, False])
+def test_slay_attention_grad_use_kernel_matches_jnp(fuse):
+    """Acceptance: jax.grad through slay_attention(use_kernel=True) ==
+    the jnp path to fp32 tolerance (interpret mode)."""
+    B, L, H, hkv, d = 2, 24, 4, 2, 16
+    cfg = _cfg(d=d)
+    params = init_feature_params(jax.random.PRNGKey(0), cfg)
+    q = jax.random.normal(jax.random.PRNGKey(1), (B, L, H, d))
+    k = jax.random.normal(jax.random.PRNGKey(2), (B, L, hkv, d))
+    v = jax.random.normal(jax.random.PRNGKey(3), (B, L, hkv, d))
+    w = jax.random.normal(jax.random.PRNGKey(4), (B, L, H, d))
+
+    def loss(q, k, v, use_kernel):
+        y = slay_attention(params, q, k, v, cfg, chunk_size=8,
+                           use_kernel=use_kernel, fuse_features=fuse,
+                           interpret=True if use_kernel else None)
+        return jnp.sum(y * w)
+
+    gk = jax.grad(lambda *a: loss(*a, True), argnums=(0, 1, 2))(q, k, v)
+    gj = jax.grad(lambda *a: loss(*a, False), argnums=(0, 1, 2))(q, k, v)
+    for name, a, b in zip("qkv", gk, gj):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=ATOL,
+                                   rtol=RTOL, err_msg=f"d{name}")
+
+
+def test_fused_vs_unfused_slay_attention():
+    """slay_attention(use_kernel=True): fuse_features on/off agree."""
+    B, L, H, hkv, d = 2, 24, 4, 2, 16
+    cfg = _cfg(d=d)
+    params = init_feature_params(jax.random.PRNGKey(0), cfg)
+    q = jax.random.normal(jax.random.PRNGKey(1), (B, L, H, d))
+    k = jax.random.normal(jax.random.PRNGKey(2), (B, L, hkv, d))
+    v = jax.random.normal(jax.random.PRNGKey(3), (B, L, hkv, d))
+    fused = slay_attention(params, q, k, v, cfg, chunk_size=8,
+                           use_kernel=True, fuse_features=True,
+                           interpret=True)
+    unfused = slay_attention(params, q, k, v, cfg, chunk_size=8,
+                             use_kernel=True, fuse_features=False,
+                             interpret=True)
+    jnp_path = slay_attention(params, q, k, v, cfg, chunk_size=8,
+                              use_kernel=False)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(unfused),
+                               atol=ATOL, rtol=RTOL)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(jnp_path),
+                               atol=ATOL, rtol=RTOL)
+
+
+# ---------------------------------------------------------------------------
+# Fused megakernel: gradient parity (custom VJP vs autodiff oracle)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("bh,bk,L,d,dv,chunk", [
+    (4, 2, 32, 16, 8, 8),
+    (2, 2, 16, 16, 16, 16),
+    (6, 1, 32, 24, 8, 16),
+])
+def test_fused_grad_matches_oracle(bh, bk, L, d, dv, chunk):
+    cfg = _cfg(d=d)
+    params = init_feature_params(jax.random.PRNGKey(0), cfg)
+    q, k, v = _inputs(jax.random.PRNGKey(1), bh, bk, L, d, dv)
+    w = jax.random.normal(jax.random.PRNGKey(2), (bh, L, dv))
+
+    def loss_kernel(q, k, v, a, om):
+        y = slay_fused.fused_causal_attention(q, k, v, a, om, cfg,
+                                              chunk_size=chunk,
+                                              interpret=True)
+        return jnp.sum(y * w)
+
+    def loss_oracle(q, k, v, a, om):
+        y = _oracle_headmajor(q, k, v, {"anchors": a, "omegas": om}, cfg,
+                              chunk)
+        return jnp.sum(y * w)
+
+    args = (q, k, v, params["anchors"], params["omegas"])
+    gk = jax.grad(loss_kernel, argnums=(0, 1, 2, 3, 4))(*args)
+    go = jax.grad(loss_oracle, argnums=(0, 1, 2, 3, 4))(*args)
+    for name, a, b in zip("q k v anchors omegas".split(), gk, go):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=ATOL,
+                                   rtol=RTOL, err_msg=f"d{name}")
+
+
+def test_fused_grad_through_model_layout_with_padding():
+    """jax.grad through ops.slay_fused_attention incl. ragged-L padding."""
+    B, L, H, hkv, d, chunk = 1, 19, 2, 1, 16, 8
+    cfg = _cfg(d=d)
+    params = init_feature_params(jax.random.PRNGKey(0), cfg)
+    q = jax.random.normal(jax.random.PRNGKey(1), (B, L, H, d))
+    k = jax.random.normal(jax.random.PRNGKey(2), (B, L, hkv, d))
+    v = jax.random.normal(jax.random.PRNGKey(3), (B, L, hkv, d))
+    w = jax.random.normal(jax.random.PRNGKey(4), (B, L, H, d))
+
+    def loss_kernel(q, k, v):
+        y = ops.slay_fused_attention(q, k, v, params, cfg, chunk_size=chunk,
+                                     interpret=True)
+        return jnp.sum(y * w)
+
+    def loss_oracle(q, k, v):
+        qf = slay_features(q, params, cfg)
+        kf = slay_features(k, params, cfg)
+        return jnp.sum(la.causal_chunked(qf, kf, v, chunk_size=chunk) * w)
+
+    gk = jax.grad(loss_kernel, argnums=(0, 1, 2))(q, k, v)
+    go = jax.grad(loss_oracle, argnums=(0, 1, 2))(q, k, v)
+    for name, a, b in zip("qkv", gk, go):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=ATOL,
+                                   rtol=RTOL, err_msg=f"d{name}")
+
+
+# ---------------------------------------------------------------------------
+# slay_scan (feature-level) gradient parity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("bh,bk,L,m,dv,chunk", [
+    (4, 2, 64, 48, 32, 16),
+    (2, 2, 32, 16, 16, 8),
+    (6, 1, 48, 24, 8, 16),
+])
+def test_scan_grad_matches_oracle(bh, bk, L, m, dv, chunk):
+    qf = jax.random.uniform(jax.random.PRNGKey(0), (bh, L, m))
+    kf = jax.random.uniform(jax.random.PRNGKey(1), (bk, L, m))
+    v = jax.random.normal(jax.random.PRNGKey(2), (bk, L, dv))
+    w = jax.random.normal(jax.random.PRNGKey(3), (bh, L, dv))
+
+    def loss_kernel(qf, kf, v):
+        y = slay_scan.causal_linear_attention(qf, kf, v, chunk_size=chunk,
+                                              interpret=True)
+        return jnp.sum(y * w)
+
+    def loss_oracle(qf, kf, v):
+        y = ref.causal_linear_attention_ref(qf, kf, v, chunk_size=chunk)
+        return jnp.sum(y * w)
+
+    gk = jax.grad(loss_kernel, argnums=(0, 1, 2))(qf, kf, v)
+    go = jax.grad(loss_oracle, argnums=(0, 1, 2))(qf, kf, v)
+    for name, a, b in zip(("qf", "kf", "v"), gk, go):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=ATOL,
+                                   rtol=RTOL, err_msg=f"d{name}")
+
+
+# ---------------------------------------------------------------------------
+# feature_map gradient parity (two-dispatch path stays trainable)
+# ---------------------------------------------------------------------------
+
+
+def test_feature_map_grad_matches_oracle():
+    from repro.kernels import feature_map
+    cfg = _cfg(d=16, P=4, D=8, R=2)
+    params = init_feature_params(jax.random.PRNGKey(0), cfg)
+    u = jax.random.normal(jax.random.PRNGKey(1), (64, 16))
+    w = jax.random.normal(jax.random.PRNGKey(2), (64, cfg.feature_dim))
+
+    def loss_kernel(u, a, om):
+        psi = feature_map.slay_feature_map(u, a, om, cfg, block_tokens=32,
+                                           interpret=True)
+        return jnp.sum(psi * w)
+
+    def loss_oracle(u, a, om):
+        psi = ref.slay_features_ref(u, {"anchors": a, "omegas": om}, cfg)
+        return jnp.sum(psi * w)
+
+    args = (u, params["anchors"], params["omegas"])
+    gk = jax.grad(loss_kernel, argnums=(0, 1, 2))(*args)
+    go = jax.grad(loss_oracle, argnums=(0, 1, 2))(*args)
+    for name, a, b in zip("u anchors omegas".split(), gk, go):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=ATOL,
+                                   rtol=RTOL, err_msg=f"d{name}")
+
+
+# ---------------------------------------------------------------------------
+# decode_step gradient parity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("bh,bk,m,dv", [(4, 2, 24, 16), (2, 2, 16, 8)])
+def test_decode_grad_matches_oracle(bh, bk, m, dv):
+    qf = jax.random.uniform(jax.random.PRNGKey(0), (bh, m))
+    kf = jax.random.uniform(jax.random.PRNGKey(1), (bk, m))
+    v = jax.random.normal(jax.random.PRNGKey(2), (bk, dv))
+    s = jax.random.uniform(jax.random.PRNGKey(3), (bk, m, dv))
+    z = jax.random.uniform(jax.random.PRNGKey(4), (bk, m)) + 1.0
+    wy = jax.random.normal(jax.random.PRNGKey(5), (bh, dv))
+    ws = jax.random.normal(jax.random.PRNGKey(6), (bk, m, dv))
+    wz = jax.random.normal(jax.random.PRNGKey(7), (bk, m))
+
+    def loss_kernel(qf, kf, v, s, z):
+        y, s2, z2 = dk.decode_linear_attention(qf, kf, v, s, z,
+                                               interpret=True)
+        return jnp.sum(y * wy) + jnp.sum(s2 * ws) + jnp.sum(z2 * wz)
+
+    def loss_oracle(qf, kf, v, s, z):
+        y, s2, z2 = ref.decode_linear_attention_ref(qf, kf, v, s, z)
+        return jnp.sum(y * wy) + jnp.sum(s2 * ws) + jnp.sum(z2 * wz)
+
+    gk = jax.grad(loss_kernel, argnums=(0, 1, 2, 3, 4))(qf, kf, v, s, z)
+    go = jax.grad(loss_oracle, argnums=(0, 1, 2, 3, 4))(qf, kf, v, s, z)
+    for name, a, b in zip("qf kf v s z".split(), gk, go):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=ATOL,
+                                   rtol=RTOL, err_msg=f"d{name}")
+
+
+# ---------------------------------------------------------------------------
+# Wrapper fallback / padding semantics (satellite fixes)
+# ---------------------------------------------------------------------------
+
+
+def test_explicit_interpret_false_falls_back_off_tpu():
+    """interpret=False off-TPU must use the reference, not a compiled
+    kernel (which would fail on CPU)."""
+    if jax.default_backend() == "tpu":
+        pytest.skip("only meaningful off-TPU")
+    cfg = _cfg()
+    params = init_feature_params(jax.random.PRNGKey(0), cfg)
+    B, L, H, d = 1, 12, 2, 16
+    qf = jax.random.uniform(jax.random.PRNGKey(1), (B, L, H, 64))
+    kf = jax.random.uniform(jax.random.PRNGKey(2), (B, L, H, 64))
+    v = jax.random.normal(jax.random.PRNGKey(3), (B, L, H, 8))
+    y = ops.slay_causal_attention(qf, kf, v, chunk_size=8, interpret=False)
+    want = la.causal_chunked(qf, kf, v, chunk_size=8)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want), atol=ATOL)
+    u = jax.random.normal(jax.random.PRNGKey(4), (B, L, H, d))
+    f = ops.slay_features(u, params, cfg, interpret=False)
+    np.testing.assert_allclose(np.asarray(f),
+                               np.asarray(ref.slay_features_ref(u, params,
+                                                                cfg)),
+                               atol=ATOL, rtol=RTOL)
+
+
+def test_causal_attention_wrapper_pads_ragged_length():
+    B, L, H, m, dv, chunk = 2, 21, 2, 24, 16, 8
+    qf = jax.random.uniform(jax.random.PRNGKey(0), (B, L, H, m))
+    kf = jax.random.uniform(jax.random.PRNGKey(1), (B, L, H, m))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, L, H, dv))
+    got = ops.slay_causal_attention(qf, kf, v, chunk_size=chunk,
+                                    interpret=True)
+    want = la.causal_chunked(qf, kf, v, chunk_size=chunk)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=ATOL,
+                               rtol=RTOL)
+
+
+def test_features_wrapper_pads_ragged_token_count():
+    cfg = _cfg()
+    params = init_feature_params(jax.random.PRNGKey(0), cfg)
+    u = jax.random.normal(jax.random.PRNGKey(1), (3, 37, 16))  # 111 tokens
+    got = ops.slay_features(u, params, cfg, block_tokens=64, interpret=True)
+    want = ref.slay_features_ref(u, params, cfg)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=ATOL,
+                               rtol=RTOL)

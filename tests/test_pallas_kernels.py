@@ -10,6 +10,8 @@ import pytest
 from repro.core.features import SlayFeatureConfig, init_feature_params
 from repro.kernels import feature_map, ops, ref, slay_scan
 
+pytestmark = pytest.mark.kernels
+
 
 @pytest.mark.parametrize("bh,bk,L,m,dv,chunk", [
     (4, 2, 64, 48, 32, 16),     # GQA g=2
