@@ -8,8 +8,6 @@ peak-memory proxy (attention-matrix bytes vs feature-state bytes)."""
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import BenchResult, time_fn
 from repro.core import baselines as bl

@@ -40,8 +40,9 @@ from repro.kernels import feature_map, slay_fused, slay_scan
 _JSON_PATH = os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "BENCH_kernels.json")
 
-# Quick: CPU interpret mode (structure / trajectory); full: paper-style
-# sweep L ∈ 1k…64k for TPU runs.
+# Smoke: one tiny L, 1 rep (CI artifact pass); quick: CPU interpret mode
+# (structure / trajectory); full: paper-style sweep L ∈ 1k…64k for TPU.
+_SMOKE_LS = (128,)
 _QUICK_LS = (256, 512)
 _FULL_LS = (1_024, 4_096, 16_384, 65_536)
 
@@ -64,9 +65,10 @@ def _roofline(bh: int, bk: int, L: int, d: int, dv: int, m: int,
             "total_hbm_bytes": io + psi}
 
 
-def run(quick: bool = True):
+def run(quick: bool = True, smoke: bool = False):
     interpret = jax.default_backend() != "tpu"
-    Ls = _QUICK_LS if quick else _FULL_LS
+    Ls = _SMOKE_LS if smoke else (_QUICK_LS if quick else _FULL_LS)
+    iters = 1 if smoke else 3
     bh, bk = 4, 2
     d = dv = 64
     chunk = 128
@@ -114,8 +116,8 @@ def run(quick: bool = True):
             grad = jax.jit(jax.grad(
                 lambda q, k, v, f=fn: jnp.sum(f(q, k, v)),
                 argnums=(0, 1, 2)))
-            t_fwd = time_fn(fwd, q, k, v, warmup=1, iters=3)
-            t_fb = time_fn(grad, q, k, v, warmup=1, iters=3)
+            t_fwd = time_fn(fwd, q, k, v, warmup=1, iters=iters)
+            t_fb = time_fn(grad, q, k, v, warmup=1, iters=iters)
             roof = _roofline(bh, bk, L, d, dv, m, name)
             for phase, t in (("fwd", t_fwd), ("fwd_bwd", t_fb)):
                 results.append(BenchResult(
@@ -130,6 +132,7 @@ def run(quick: bool = True):
             "backend": jax.default_backend(),
             "interpret": interpret,
             "quick": quick,
+            "smoke": smoke,
             "shape": {"bh": bh, "bk": bk, "d": d, "dv": dv, "m": m,
                       "chunk": chunk, "P": cfg.num_anchors,
                       "D": cfg.num_prf, "R": cfg.num_quad_nodes},

@@ -4,12 +4,16 @@
     PYTHONPATH=src python -m benchmarks.run --full       # paper-scale sweep
     PYTHONPATH=src python -m benchmarks.run --only table2,fig9
     PYTHONPATH=src python -m benchmarks.run --suite kernels   # kernel bench
+    PYTHONPATH=src python -m benchmarks.run --suite serving --smoke  # CI
 
 Prints ``name,value,unit`` CSV lines and writes results/benchmarks.json.
+``--smoke`` runs tiny shapes with 1 rep — CI's per-PR artifact pass; only
+suites that implement it (kernels, serving) accept the flag.
 """
 from __future__ import annotations
 
 import argparse
+import inspect
 import json
 import os
 import sys
@@ -19,16 +23,20 @@ import time
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes, 1 rep (CI artifact pass)")
     ap.add_argument("--only", default=None,
                     help="comma-separated module keys (table2,fig2,...)")
     ap.add_argument("--suite", default=None,
-                    help="named suite group: paper (default set) | kernels")
+                    help="named group: paper (default) | kernels | serving")
     args = ap.parse_args(argv)
+    if args.smoke and args.full:
+        ap.error("--smoke and --full are mutually exclusive")
 
     from benchmarks import (fig2_scaling, fig9_quadrature, kernel_bench,
-                            roofline_report, table2_poly_approx,
-                            table3_synthetic, table4_extreme,
-                            table5_slayformer)
+                            roofline_report, serving_bench,
+                            table2_poly_approx, table3_synthetic,
+                            table4_extreme, table5_slayformer)
     suites = {
         "table2": table2_poly_approx,
         "fig2": fig2_scaling,
@@ -38,10 +46,12 @@ def main(argv=None) -> int:
         "table5": table5_slayformer,
         "roofline": roofline_report,
         "kernels": kernel_bench,
+        "serving": serving_bench,
     }
-    # The kernel bench is opt-in (it is its own suite group); the default /
-    # "paper" group runs everything else.
-    groups = {"paper": set(suites) - {"kernels"}, "kernels": {"kernels"}}
+    # The kernel/serving benches are opt-in (their own suite groups); the
+    # default / "paper" group runs everything else.
+    groups = {"paper": set(suites) - {"kernels", "serving"},
+              "kernels": {"kernels"}, "serving": {"serving"}}
     only = set(args.only.split(",")) if args.only else None
     if args.suite:
         if args.suite not in groups:
@@ -59,8 +69,14 @@ def main(argv=None) -> int:
             continue
         t0 = time.monotonic()
         print(f"# --- {key} ({mod.__name__}) ---", flush=True)
+        kwargs = {"quick": not args.full}
+        if "smoke" in inspect.signature(mod.run).parameters:
+            kwargs["smoke"] = args.smoke
+        elif args.smoke:
+            print(f"# {key}: no --smoke support, skipping", flush=True)
+            continue
         try:
-            results = mod.run(quick=not args.full)
+            results = mod.run(**kwargs)
         except Exception as e:  # noqa: BLE001 — report per-suite failures
             print(f"{key}/SUITE_FAILED,{type(e).__name__},{e}",
                   file=sys.stderr)

@@ -1,0 +1,113 @@
+"""Serving benchmark: continuous batching under a Poisson arrival trace.
+
+Replays a seeded Poisson request trace (exponential inter-arrival times, in
+engine ticks) through :class:`repro.serving.ContinuousServingEngine` at
+several load levels and emits ``BENCH_serving.json`` (repo root) — the
+serving perf trajectory CI tracks per PR:
+
+* ``decode_tokens_per_s`` / ``total_tokens_per_s`` — wall-clock throughput
+  (noisy on CPU; structural on TPU),
+* ``ttft_ticks_p50`` / ``p95`` — time-to-first-token in engine ticks, a
+  backend-independent measure of scheduling latency (queueing + chunked
+  prefill) that survives CPU timing noise,
+* ``mean_slot_occupancy`` / ``mean_queue_depth`` — pool pressure.
+
+Both cache regimes run: the constant-state SLAY path (slot overwrite
+eviction) and the KV-ring softmax baseline (same scheduler, O(max_len)
+slot state), so the JSON shows the serving asymmetry directly.
+
+    PYTHONPATH=src python -m benchmarks.run --suite serving
+    PYTHONPATH=src python -m benchmarks.run --suite serving --smoke
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import numpy as np
+
+from benchmarks.common import BenchResult
+from repro import configs
+from repro.configs.base import ServingConfig
+from repro.launch.mesh import make_host_mesh
+from repro.models import api
+from repro.serving.engine import ContinuousServingEngine, Request
+
+_JSON_PATH = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_serving.json")
+
+# (requests, max_new, prompt range); load = arrival rate in requests/tick.
+_SMOKE = {"n": 4, "max_new": 4, "prompt": (3, 8), "loads": (0.25, 1.0),
+          "num_slots": 2, "max_len": 32, "prefill_chunk": 4}
+_QUICK = {"n": 10, "max_new": 8, "prompt": (4, 16), "loads": (0.1, 0.5),
+          "num_slots": 4, "max_len": 64, "prefill_chunk": 8}
+_FULL = {"n": 32, "max_new": 16, "prompt": (8, 48),
+         "loads": (0.05, 0.2, 0.8), "num_slots": 8, "max_len": 128,
+         "prefill_chunk": 16}
+
+
+def _poisson_trace(rng, n: int, rate: float, prompt_range, vocab: int,
+                   max_new: int) -> list[Request]:
+    """n requests with exp(rate) inter-arrival ticks and random prompts."""
+    t = 0.0
+    reqs = []
+    lo, hi = prompt_range
+    for _ in range(n):
+        t += rng.exponential(1.0 / rate)
+        plen = int(rng.integers(lo, hi + 1))
+        prompt = rng.integers(3, vocab, size=plen).astype(np.int32)
+        reqs.append(Request(prompt, max_new_tokens=max_new,
+                            arrival_time=t))
+    return reqs
+
+
+def run(quick: bool = True, smoke: bool = False):
+    p = _SMOKE if smoke else (_QUICK if quick else _FULL)
+    mesh = make_host_mesh()
+    results = []
+    rows = []
+    for regime, attn_kind in (("constant_state", "slay"),
+                              ("kv_ring", "softmax")):
+        cfg = configs.get_smoke_config("slayformer-124m",
+                                       attn_kind=attn_kind)
+        params = api.init_params(cfg, jax.random.PRNGKey(0))
+        for load in p["loads"]:
+            rng = np.random.default_rng(1234)
+            reqs = _poisson_trace(rng, p["n"], load, p["prompt"],
+                                  cfg.vocab_size, p["max_new"])
+            eng = ContinuousServingEngine(
+                cfg, params, mesh,
+                serving=ServingConfig(num_slots=p["num_slots"],
+                                      max_len=p["max_len"],
+                                      prefill_chunk=p["prefill_chunk"]))
+            outs, summary = eng.run(reqs)
+            assert summary["requests_completed"] == p["n"]
+            tag = f"serving/{regime}/load{load:g}"
+            for key in ("decode_tokens_per_s", "ttft_ticks_p50",
+                        "ttft_ticks_p95", "mean_slot_occupancy",
+                        "mean_queue_depth"):
+                unit = ("tok/s" if "per_s" in key
+                        else "ticks" if "ttft" in key else "ratio")
+                results.append(BenchResult(
+                    f"{tag}/{key}", float(summary[key]), unit,
+                    extra={"regime": regime, "load": load}))
+            rows.append({"regime": regime, "load": load,
+                         "num_slots": p["num_slots"],
+                         "requests": p["n"], **summary})
+
+    payload = {
+        "meta": {
+            "backend": jax.default_backend(),
+            "smoke": smoke, "quick": quick,
+            "params": p,
+            "note": ("ttft/occupancy are in engine ticks (backend-"
+                     "independent scheduling trajectory); *_per_s are "
+                     "wall-clock and only meaningful on TPU"),
+        },
+        "results": rows,
+    }
+    with open(_JSON_PATH, "w") as f:
+        json.dump(payload, f, indent=1)
+        f.write("\n")
+    return results

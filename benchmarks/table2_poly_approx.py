@@ -7,7 +7,6 @@ scales (Table 6's Small/Medium/Large, CPU-scaled)."""
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import BenchResult, time_fn

@@ -5,7 +5,6 @@ and reports masked-answer accuracy. Quick mode: 1 representative task per
 category; full mode: the whole 22-task suite."""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

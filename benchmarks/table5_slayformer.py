@@ -6,7 +6,6 @@ token budget — only the attention differs — mirroring the paper's
 controlled setup. Reports final validation loss and perplexity."""
 from __future__ import annotations
 
-import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import (BenchResult, MECHANISMS, tiny_lm_config,

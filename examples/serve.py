@@ -1,7 +1,9 @@
-"""Batched serving demo: prefill + lockstep decode with SLAY's
-constant-size recurrent state (no KV cache growth).
+"""Serving demo: continuous batching (slot pool, staggered arrivals,
+streaming) or the lockstep reference, with SLAY's constant-size recurrent
+state (no KV cache growth).
 
-    PYTHONPATH=src python examples/serve.py
+    PYTHONPATH=src python examples/serve.py                  # continuous
+    PYTHONPATH=src python examples/serve.py --lockstep
     PYTHONPATH=src python examples/serve.py --arch phi4-mini-3.8b --smoke
 """
 import argparse
@@ -11,9 +13,11 @@ import jax
 import numpy as np
 
 from repro import configs
+from repro.configs.base import ServingConfig
 from repro.launch.mesh import make_host_mesh
 from repro.models import api
-from repro.serving.engine import Request, ServingEngine
+from repro.serving.engine import (ContinuousServingEngine, Request,
+                                  ServingEngine)
 
 
 def main():
@@ -24,23 +28,39 @@ def main():
     ap.add_argument("--attn-kind", default=None)
     ap.add_argument("--max-new", type=int, default=24)
     ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--lockstep", action="store_true",
+                    help="lockstep reference instead of continuous batching")
+    ap.add_argument("--slots", type=int, default=2)
     args = ap.parse_args()
 
     overrides = {"attn_kind": args.attn_kind} if args.attn_kind else {}
     cfg = configs.get_smoke_config(args.arch, **overrides)
     params = api.init_params(cfg, jax.random.PRNGKey(0))
     mesh = make_host_mesh()
-    engine = ServingEngine(cfg, params, mesh, max_len=256)
 
     rng = np.random.default_rng(0)
     reqs = [Request(rng.integers(3, cfg.vocab_size,
                                  size=rng.integers(4, 12)).astype(np.int32),
-                    max_new_tokens=args.max_new)
-            for _ in range(args.batch)]
+                    max_new_tokens=args.max_new,
+                    arrival_time=float(2 * i))
+            for i in range(args.batch)]
     print(f"serving {len(reqs)} requests on {cfg.name} "
           f"(attn={cfg.attn_kind})...")
     t0 = time.perf_counter()
-    outs = engine.generate(reqs, temperature=0.8)
+    if args.lockstep:
+        engine = ServingEngine(cfg, params, mesh, max_len=256)
+        outs = engine.generate(reqs, temperature=0.8)
+    else:
+        engine = ContinuousServingEngine(
+            cfg, params, mesh,
+            serving=ServingConfig(num_slots=args.slots, max_len=256,
+                                  prefill_chunk=8, temperature=0.8))
+        out_map, summary = engine.run(reqs)
+        outs = [out_map[i] for i in range(len(reqs))]
+        print(f"  pool: {args.slots} slots | occupancy "
+              f"{summary['mean_slot_occupancy']:.2f} | TTFT p50 "
+              f"{summary['ttft_ticks_p50']} ticks | "
+              f"{summary['decode_tokens_per_s']:.1f} decode tok/s")
     dt = time.perf_counter() - t0
     total = sum(len(o) for o in outs)
     for i, o in enumerate(outs):

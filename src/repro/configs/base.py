@@ -147,6 +147,33 @@ class ArchConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class ServingConfig:
+    """Continuous-batching engine knobs (see repro.serving.engine).
+
+    The pool has ``num_slots`` decode slots, each with ``max_len`` context
+    capacity (KV ring size; the constant-state path is length-independent).
+    Prompts are absorbed ``prefill_chunk`` tokens per engine tick so long
+    prompts cannot stall the decode pool; ``decode_ticks_per_prefill``
+    decode ticks run between consecutive prefill chunks when both kinds of
+    work are pending (1 = strict alternation).
+    """
+
+    num_slots: int = 4
+    max_len: int = 4096
+    prefill_chunk: int = 128          # 0 = absorb whole prompts in one tick
+    decode_ticks_per_prefill: int = 1
+    max_queue: int = 0                # 0 = unbounded admission queue
+    temperature: float = 0.0          # 0 = greedy
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.num_slots < 1:
+            raise ValueError("num_slots must be >= 1")
+        if self.prefill_chunk < 0 or self.max_len < 1:
+            raise ValueError("bad prefill_chunk/max_len")
+
+
+@dataclasses.dataclass(frozen=True)
 class ShapeCell:
     name: str
     seq_len: int

@@ -149,7 +149,8 @@ def _tensorsketch(u: jnp.ndarray, params: dict, cfg: SlayFeatureConfig) -> jnp.n
     uf = u.astype(jnp.float32)
     c1 = jnp.zeros((*u.shape[:-1], dp), jnp.float32).at[..., h1].add(uf * s1)
     c2 = jnp.zeros((*u.shape[:-1], dp), jnp.float32).at[..., h2].add(uf * s2)
-    out = jnp.fft.irfft(jnp.fft.rfft(c1, axis=-1) * jnp.fft.rfft(c2, axis=-1), n=dp, axis=-1)
+    out = jnp.fft.irfft(jnp.fft.rfft(c1, axis=-1) * jnp.fft.rfft(c2, axis=-1),
+                        n=dp, axis=-1)
     return out.astype(u.dtype)
 
 

@@ -24,7 +24,8 @@ def yat_scores(q: jnp.ndarray, k: jnp.ndarray, eps: float = 1e-3) -> jnp.ndarray
     return jnp.square(dot) / (jnp.maximum(dist2, 0.0) + eps)
 
 
-def spherical_yat_scores(q: jnp.ndarray, k: jnp.ndarray, eps: float = 1e-3) -> jnp.ndarray:
+def spherical_yat_scores(q: jnp.ndarray, k: jnp.ndarray,
+                         eps: float = 1e-3) -> jnp.ndarray:
     """Spherical E-product scores (paper Eq. 5): x²/(C−2x), x = q̂ᵀk̂."""
     x = jnp.einsum("...qhd,...khd->...hqk", normalize(q), normalize(k))
     return jnp.square(x) / (2.0 + eps - 2.0 * x)

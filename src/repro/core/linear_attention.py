@@ -51,13 +51,20 @@ def noncausal(qf, kf, v, delta: float = 1e-6):
     return out.reshape(*qf.shape[:-1], v.shape[-1]).astype(v.dtype)
 
 
-def causal_chunked(qf, kf, v, chunk_size: int = 256, delta: float = 1e-6):
+def causal_chunked(qf, kf, v, chunk_size: int = 256, delta: float = 1e-6,
+                   init_state: LinearState | None = None,
+                   return_state: bool = False):
     """Causal linear attention via chunked prefix state (pure-jnp oracle for
     the Pallas kernel; also the general-rank training path).
 
     qf: (..., L, H, m), kf: (..., L, Hkv, m), v: (..., L, Hkv, dv).
     L is zero-padded to a chunk multiple (zero features contribute nothing
     to the running state, and padded query rows are sliced away).
+
+    ``init_state`` seeds the running (S, z) carry — chunked *prefill
+    continuation*: feeding a prompt chunk-by-chunk with the previous chunks'
+    state reproduces the whole-prompt result exactly (same fp32 carry math).
+    ``return_state`` additionally returns the post-sequence LinearState.
     """
     *lead, L, H, m = qf.shape
     num_kv, dv = kf.shape[-2], v.shape[-1]
@@ -65,7 +72,10 @@ def causal_chunked(qf, kf, v, chunk_size: int = 256, delta: float = 1e-6):
         pad = chunk_size - L % chunk_size
         padding = [(0, 0)] * (len(lead)) + [(0, pad), (0, 0), (0, 0)]
         out = causal_chunked(jnp.pad(qf, padding), jnp.pad(kf, padding),
-                             jnp.pad(v, padding), chunk_size, delta)
+                             jnp.pad(v, padding), chunk_size, delta,
+                             init_state, return_state)
+        if return_state:
+            return out[0][..., :L, :, :], out[1]
         return out[..., :L, :, :]
     C, T = L // chunk_size, chunk_size
     acc = jnp.float32
@@ -104,11 +114,19 @@ def causal_chunked(qf, kf, v, chunk_size: int = 256, delta: float = 1e-6):
         out = (num / (den[..., None] + delta)).astype(v.dtype)
         return (s, z), out
 
-    s0 = jnp.zeros((*lead, num_kv, m, dv), acc)
-    z0 = jnp.zeros((*lead, num_kv, m), acc)
-    (_, _), ys = jax.lax.scan(step, (s0, z0), (qg, kc, vc))
+    if init_state is not None:
+        s0 = jnp.broadcast_to(init_state.s.astype(acc),
+                              (*lead, num_kv, m, dv))
+        z0 = jnp.broadcast_to(init_state.z.astype(acc), (*lead, num_kv, m))
+    else:
+        s0 = jnp.zeros((*lead, num_kv, m, dv), acc)
+        z0 = jnp.zeros((*lead, num_kv, m), acc)
+    (s_fin, z_fin), ys = jax.lax.scan(step, (s0, z0), (qg, kc, vc))
     ys = jnp.moveaxis(ys, 0, nlead)  # back to (..., C, T, Hkv, G, dv)
-    return ys.reshape(*lead, L, H, dv)
+    out = ys.reshape(*lead, L, H, dv)
+    if return_state:
+        return out, LinearState(s_fin, z_fin)
+    return out
 
 
 def init_state(lead_shape, num_kv: int, m: int, dv: int) -> LinearState:

@@ -16,7 +16,6 @@ from __future__ import annotations
 import dataclasses
 
 import jax
-import jax.numpy as jnp
 
 from repro.core import linear_attention as la
 from repro.core.features import (SlayFeatureConfig, init_feature_params,

@@ -187,6 +187,20 @@ def batch_sharding(mesh: Mesh, rules: ShardingRules = DEFAULT_RULES,
     return NamedSharding(mesh, P(ax))
 
 
+def serving_cache_sharding(mesh: Mesh, rules: ShardingRules, abstract):
+    """Slot-stable decode-cache shardings for the continuous-batching pool.
+
+    Derived from leaf *shapes* only (never from which slots are live), with
+    the pool's slot dim fixed for the engine's lifetime — so admission and
+    eviction (single-slot overwrites via ``api.reset_slot``/``write_slot``)
+    keep every leaf's sharding bit-identical and never trigger a reshard or
+    a host round-trip. The engine jits its decode/slot ops with these as
+    both in- and out-shardings (cache donated), making that contract
+    explicit to XLA.
+    """
+    return cache_sharding(mesh, rules, abstract)
+
+
 def cache_sharding(mesh: Mesh, rules: ShardingRules, abstract):
     """Decode caches: shard the batch dim (first non-layer dim) over
     (pod, data) and head-like dims heuristically over model.

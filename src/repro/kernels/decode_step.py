@@ -31,10 +31,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _kernel(qf_ref, kf_ref, v_ref, s_ref, z_ref, y_ref, s_out, z_out, *,
-            delta: float):
-    """Refs (per kv head): qf (1, G, m), kf (1, m), v (1, dv),
-    s (1, m, dv) fp32, z (1, m) fp32; outs y (1, G, dv), s', z'."""
+def _step_body(qf_ref, kf_ref, v_ref, s_ref, z_ref, y_ref, s_out, z_out,
+               delta: float):
+    """Shared per-kv-head step: state RMW + grouped-query readout."""
     kf = kf_ref[0].astype(jnp.float32)                       # (m,)
     v = v_ref[0].astype(jnp.float32)                         # (dv,)
     s = s_ref[0] + kf[:, None] * v[None, :]                  # (m, dv)
@@ -47,6 +46,37 @@ def _kernel(qf_ref, kf_ref, v_ref, s_ref, z_ref, y_ref, s_out, z_out, *,
     z_out[0] = z
 
 
+def _kernel(qf_ref, kf_ref, v_ref, s_ref, z_ref, y_ref, s_out, z_out, *,
+            delta: float):
+    """Refs (per kv head): qf (1, G, m), kf (1, m), v (1, dv),
+    s (1, m, dv) fp32, z (1, m) fp32; outs y (1, G, dv), s', z'."""
+    _step_body(qf_ref, kf_ref, v_ref, s_ref, z_ref, y_ref, s_out, z_out,
+               delta)
+
+
+def _kernel_masked(a_ref, qf_ref, kf_ref, v_ref, s_ref, z_ref, y_ref,
+                   s_out, z_out, *, delta: float):
+    """Active-slot-masked step for the continuous-batching pool.
+
+    a (1, 1) int32 per kv row: nonzero = slot is serving a live request.
+    Drained slots skip the feature/MXU work and the state RMW entirely —
+    the state block passes through unchanged and the output row is zero —
+    so an idle slot costs only the block pipeline, no compute.
+    """
+    active = a_ref[0, 0] != 0
+
+    @pl.when(active)
+    def _():
+        _step_body(qf_ref, kf_ref, v_ref, s_ref, z_ref, y_ref, s_out,
+                   z_out, delta)
+
+    @pl.when(jnp.logical_not(active))
+    def _():
+        y_ref[0] = jnp.zeros_like(y_ref[0])
+        s_out[0] = s_ref[0]
+        z_out[0] = z_ref[0]
+
+
 class DecodeStatics(NamedTuple):
     delta: float
     interpret: bool
@@ -54,18 +84,32 @@ class DecodeStatics(NamedTuple):
 
 @functools.partial(jax.jit, static_argnames=("delta", "interpret"))
 def decode_linear_attention(qf: jnp.ndarray, kf: jnp.ndarray, v: jnp.ndarray,
-                            s: jnp.ndarray, z: jnp.ndarray, *,
+                            s: jnp.ndarray, z: jnp.ndarray,
+                            active: jnp.ndarray | None = None, *,
                             delta: float = 1e-6,
                             interpret: bool = False):
     """qf (BH, m), kf (BK, m), v (BK, dv), s (BK, m, dv) f32, z (BK, m) f32
     -> (y (BH, dv), s', z'). BH must be a multiple of BK (GQA).
-    Differentiable (custom VJP)."""
+    Differentiable (custom VJP) when ``active`` is None.
+
+    ``active`` (BK,) int/bool masks continuous-batching pool rows: inactive
+    (drained) kv rows skip the state update and MXU readout — y rows are 0
+    and (s, z) pass through unchanged — so an idle serving slot costs no
+    compute. The masked path is forward-only, built for the serving decode
+    tick; wiring it through the jitted model decode path is a tracked
+    ROADMAP item (the engine currently runs the jnp reference decode).
+    """
     bh, m = qf.shape
     bk = v.shape[0]
     if bh % bk:
         raise ValueError(f"q rows {bh} not divisible by kv rows {bk}")
     st = DecodeStatics(delta=delta, interpret=interpret)
-    return _decode(st, qf, kf, v, s, z)
+    if active is None:
+        return _decode(st, qf, kf, v, s, z)
+    if active.shape != (bk,):
+        raise ValueError(f"active shape {active.shape} != ({bk},)")
+    return _decode_masked(st, qf, kf, v, s, z,
+                          active.astype(jnp.int32))
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
@@ -73,36 +117,63 @@ def _decode(st: DecodeStatics, qf, kf, v, s, z):
     return _decode_impl(st, qf, kf, v, s, z)
 
 
+def _specs(bk, g, m, dv, y_dtype):
+    in_specs = [
+        pl.BlockSpec((1, g, m), lambda i: (i, 0, 0)),
+        pl.BlockSpec((1, m), lambda i: (i, 0)),
+        pl.BlockSpec((1, dv), lambda i: (i, 0)),
+        pl.BlockSpec((1, m, dv), lambda i: (i, 0, 0)),
+        pl.BlockSpec((1, m), lambda i: (i, 0)),
+    ]
+    out_specs = [
+        pl.BlockSpec((1, g, dv), lambda i: (i, 0, 0)),
+        pl.BlockSpec((1, m, dv), lambda i: (i, 0, 0)),
+        pl.BlockSpec((1, m), lambda i: (i, 0)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((bk, g, dv), y_dtype),
+        jax.ShapeDtypeStruct((bk, m, dv), jnp.float32),
+        jax.ShapeDtypeStruct((bk, m), jnp.float32),
+    ]
+    return in_specs, out_specs, out_shape
+
+
 def _decode_impl(st: DecodeStatics, qf, kf, v, s, z):
     bh, m = qf.shape
     bk, dv = v.shape
     g = bh // bk
     qg = qf.reshape(bk, g, m)
-    delta, interpret = st.delta, st.interpret
+    in_specs, out_specs, out_shape = _specs(bk, g, m, dv, v.dtype)
 
     y, s2, z2 = pl.pallas_call(
-        functools.partial(_kernel, delta=delta),
+        functools.partial(_kernel, delta=st.delta),
         grid=(bk,),
-        in_specs=[
-            pl.BlockSpec((1, g, m), lambda i: (i, 0, 0)),
-            pl.BlockSpec((1, m), lambda i: (i, 0)),
-            pl.BlockSpec((1, dv), lambda i: (i, 0)),
-            pl.BlockSpec((1, m, dv), lambda i: (i, 0, 0)),
-            pl.BlockSpec((1, m), lambda i: (i, 0)),
-        ],
-        out_specs=[
-            pl.BlockSpec((1, g, dv), lambda i: (i, 0, 0)),
-            pl.BlockSpec((1, m, dv), lambda i: (i, 0, 0)),
-            pl.BlockSpec((1, m), lambda i: (i, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((bk, g, dv), v.dtype),
-            jax.ShapeDtypeStruct((bk, m, dv), jnp.float32),
-            jax.ShapeDtypeStruct((bk, m), jnp.float32),
-        ],
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
         input_output_aliases={3: 1, 4: 2},   # s, z updated in place
-        interpret=interpret,
+        interpret=st.interpret,
     )(qg, kf, v, s, z)
+    return y.reshape(bh, dv), s2, z2
+
+
+def _decode_masked(st: DecodeStatics, qf, kf, v, s, z, active):
+    bh, m = qf.shape
+    bk, dv = v.shape
+    g = bh // bk
+    qg = qf.reshape(bk, g, m)
+    in_specs, out_specs, out_shape = _specs(bk, g, m, dv, v.dtype)
+    in_specs = [pl.BlockSpec((1, 1), lambda i: (i, 0))] + in_specs
+
+    y, s2, z2 = pl.pallas_call(
+        functools.partial(_kernel_masked, delta=st.delta),
+        grid=(bk,),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        input_output_aliases={4: 1, 5: 2},   # s, z updated in place
+        interpret=st.interpret,
+    )(active.reshape(bk, 1), qg, kf, v, s, z)
     return y.reshape(bh, dv), s2, z2
 
 

@@ -14,7 +14,6 @@ size G = BH // BK maps q-head row i to kv row i // G.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from repro.core import linear_attention as la
@@ -46,13 +45,15 @@ def slay_features_ref(u: jnp.ndarray, params: dict,
     return slay_features(u, params, cfg)
 
 
-def decode_linear_attention_ref(qf, kf, v, s, z, *, delta: float = 1e-6):
+def decode_linear_attention_ref(qf, kf, v, s, z, active=None, *,
+                                delta: float = 1e-6):
     """Oracle for kernels.decode_step: one-token state update + readout.
 
     qf (BH, m), kf (BK, m), v (BK, dv), s (BK, m, dv), z (BK, m).
     BK is treated as the batch; each kv row serves its G = BH // BK query
     heads (q row i -> kv row i // G), expressed to core.decode_step as an
-    explicit singleton kv-head axis.
+    explicit singleton kv-head axis. ``active`` (BK,) masks drained pool
+    rows: y rows zero, state passes through (continuous-batching slots).
     """
     bh, m = qf.shape
     bk, dv = v.shape
@@ -60,4 +61,10 @@ def decode_linear_attention_ref(qf, kf, v, s, z, *, delta: float = 1e-6):
     state = la.LinearState(s[:, None], z[:, None])      # (bk, 1, m, dv)
     y, new = la.decode_step(qf.reshape(bk, g, m), kf[:, None], v[:, None],
                             state, delta=delta)
-    return y.reshape(bh, dv), new.s[:, 0], new.z[:, 0]
+    y, s2, z2 = y.reshape(bh, dv), new.s[:, 0], new.z[:, 0]
+    if active is not None:
+        am = active.astype(bool)
+        y = jnp.where(jnp.repeat(am, g)[:, None], y, 0.0)
+        s2 = jnp.where(am[:, None, None], s2, s)
+        z2 = jnp.where(am[:, None], z2, z)
+    return y, s2, z2

@@ -15,7 +15,6 @@ Exit code != 0 on any failed cell (sharding mismatch, OOM at compile,
 unsupported collective) — those are bugs in the system, per the assignment.
 """  # noqa: E402
 import argparse
-import dataclasses
 import json
 import sys
 import time

@@ -53,6 +53,35 @@ def abstract_cache(cfg: ArchConfig, batch: int, max_len: int):
     return jax.eval_shape(lambda: init_cache(cfg, batch, max_len))
 
 
+# -- Slot-pooled cache surface (continuous-batching serving) ---------------
+#
+# A pool cache is an ordinary init_cache(cfg, num_slots, max_len); slots are
+# batch rows. Admission/eviction are single-slot overwrites — O(slot bytes),
+# no paging — because every regime's per-sequence decode state lives in
+# contiguous batch-indexed leaves (constant-state (S, z), KV rings, SSM
+# carries) with per-slot positions.
+
+
+def reset_slot(cfg: ArchConfig, cache, slot: int):
+    """Zero one slot (eviction). Slot-stable: other rows untouched."""
+    return _mod(cfg).reset_slot(cfg, cache, slot)
+
+
+def write_slot(cfg: ArchConfig, cache, src, slot: int):
+    """Install a batch=1 request cache into a pool slot (admission)."""
+    return _mod(cfg).write_slot(cfg, cache, src, slot)
+
+
+def supports_chunked_prefill(cfg: ArchConfig) -> bool:
+    """Whether prefill can be fed chunk-by-chunk with state continuation."""
+    return _mod(cfg).supports_chunked_prefill(cfg)
+
+
+def prefill_chunk(cfg: ArchConfig, params, cache, tokens):
+    """Absorb one prompt chunk into an existing cache; last-token logits."""
+    return _mod(cfg).prefill_chunk(params, cfg, cache, tokens)
+
+
 def prefill(params, cfg: ArchConfig, batch: dict, *,
             max_len: int | None = None):
     if cfg.family == "encdec":

@@ -33,13 +33,19 @@ from repro.core.slay import AttentionSpec
 class AttnCache(NamedTuple):
     """Uniform decode cache. Exactly one of (kv, state) is meaningful.
 
-    kv:    k,v ring buffers (..., S, Hkv, Dh) + scalar write position.
+    kv:    k,v ring buffers (..., S, Hkv, Dh) + write position(s).
     state: linear-attention running state (S = sum psi(k)^T v, z = sum psi(k)).
+
+    ``pos`` counts tokens seen so far. It is *per slot* — shape equal to the
+    lead (batch) shape — so a serving slot pool can hold sequences of
+    different lengths and a slot overwrite never perturbs its neighbours.
+    A scalar pos (rank 0) is still accepted on the decode path for lockstep
+    callers where every row shares one position.
     """
 
     k: jnp.ndarray | None
     v: jnp.ndarray | None
-    pos: jnp.ndarray | None          # int32 scalar (tokens seen so far)
+    pos: jnp.ndarray | None          # int32, lead-shaped (or scalar)
     s: jnp.ndarray | None            # (..., Hkv, m, dv) fp32
     z: jnp.ndarray | None            # (..., Hkv, m)     fp32
 
@@ -50,12 +56,13 @@ def init_cache(spec: AttentionSpec, lead_shape, num_kv: int, head_dim: int,
         m = spec.slay.feature_dim if spec.kind == "slay" else _baseline_dim(
             spec, head_dim)
         st = la.init_state(lead_shape, num_kv, m, dv)
-        return AttnCache(None, None, jnp.zeros((), jnp.int32), st.s, st.z)
+        return AttnCache(None, None, jnp.zeros(lead_shape, jnp.int32),
+                         st.s, st.z)
     size = min(max_len, spec.window) if spec.window else max_len
     shape = (*lead_shape, size, num_kv, head_dim)
     return AttnCache(jnp.zeros(shape, dtype),
                      jnp.zeros((*lead_shape, size, num_kv, dv), dtype),
-                     jnp.zeros((), jnp.int32), None, None)
+                     jnp.zeros(lead_shape, jnp.int32), None, None)
 
 
 def _baseline_dim(spec: AttentionSpec, head_dim: int) -> int:
@@ -109,10 +116,12 @@ def prefill_cache(spec: AttentionSpec, params: dict | None, k, v,
     KV kinds write the (window-truncated) suffix into the ring buffer.
     """
     L = k.shape[-3]
+    lead = k.shape[:-3]
+    pos = jnp.full(lead, L, jnp.int32)
     if spec.is_linear:
         kf = _features(spec, params, k)
         st = la.prefill_state(kf, v)
-        return AttnCache(None, None, jnp.asarray(L, jnp.int32), st.s, st.z)
+        return AttnCache(None, None, pos, st.s, st.z)
     size = cache.k.shape[-3]
     # Keep the most recent `size` tokens, written at ring positions.
     take = min(L, size)
@@ -120,7 +129,82 @@ def prefill_cache(spec: AttentionSpec, params: dict | None, k, v,
     idx = (jnp.arange(take) + (L - take)) % size
     kbuf = cache.k.at[..., idx, :, :].set(ks.astype(cache.k.dtype))
     vbuf = cache.v.at[..., idx, :, :].set(vs.astype(cache.v.dtype))
-    return AttnCache(kbuf, vbuf, jnp.asarray(L, jnp.int32), None, None)
+    return AttnCache(kbuf, vbuf, pos, None, None)
+
+
+def prefill_chunk(spec: AttentionSpec, params: dict | None, q, k, v,
+                  cache: AttnCache) -> tuple[jnp.ndarray, AttnCache]:
+    """Absorb one *prompt chunk* into an existing decode cache.
+
+    q (B, Lc, H, Dh), k/v (B, Lc, Hkv, *); ``cache.pos`` is the per-slot
+    (B,) count of tokens already absorbed. This is the chunked-prefill
+    primitive: feeding a prompt chunk-by-chunk reproduces the whole-prompt
+    prefill (linear kinds: exact same fp32 state recurrence; softmax: exact
+    attention against the ring prefix + causal intra-chunk scores).
+
+    Supported kinds: every linear kind, and softmax (windowed or not).
+    The exact quadratic yat kinds have no incremental form here — callers
+    fall back to whole-prompt prefill for them.
+    """
+    B, Lc = q.shape[0], q.shape[1]
+    start = cache.pos                                     # (B,)
+    if spec.is_linear:
+        qf = _features(spec, params, q)
+        kf = _features(spec, params, k)
+        out, st = la.causal_chunked(
+            qf, kf, v, chunk_size=max(min(spec.chunk_size, Lc), 1),
+            init_state=la.LinearState(cache.s, cache.z), return_state=True)
+        return out, AttnCache(None, None, start + Lc, st.s, st.z)
+    if spec.kind != "softmax":
+        raise NotImplementedError(
+            f"chunked prefill not supported for kind={spec.kind!r}")
+
+    size = cache.k.shape[-3]
+    dh = q.shape[-1]
+    hkv = k.shape[-2]
+    g = q.shape[-2] // hkv
+    qg = q.reshape(B, Lc, hkv, g, dh)
+    p = start[:, None] + jnp.arange(Lc)[None, :]          # (B, Lc) abs pos
+    # Absolute position held by ring slot j *before* this chunk's writes:
+    # the newest written position congruent to j (mod size); negative when
+    # the slot has never been written.
+    j = jnp.arange(size)[None, :]
+    a0 = j + ((start[:, None] - 1 - j) // size) * size    # (B, S)
+    pre_ok = a0 >= 0
+    if spec.window:
+        pre_ok = pre_ok & (p[:, :, None] - a0[:, None, :] < spec.window)
+    else:
+        pre_ok = jnp.broadcast_to(pre_ok[:, None, :], (B, Lc, size))
+    kb, vb = cache.k.astype(q.dtype), cache.v.astype(q.dtype)
+    s_pre = jnp.einsum("blkgd,bskd->blkgs", qg, kb)       # (B,Lc,Hkv,G,S)
+    s_in = jnp.einsum("blkgd,btkd->blkgt", qg, k.astype(q.dtype))
+    rel = jnp.arange(Lc)[:, None] - jnp.arange(Lc)[None, :]
+    in_ok = rel >= 0
+    if spec.window:
+        in_ok = in_ok & (rel < spec.window)
+    scores = jnp.concatenate([s_pre, s_in], axis=-1) / jnp.sqrt(
+        jnp.asarray(dh, q.dtype))
+    if spec.logit_softcap:
+        scores = spec.logit_softcap * jnp.tanh(scores / spec.logit_softcap)
+    mask = jnp.concatenate([
+        jnp.broadcast_to(pre_ok[:, :, None, None, :], (B, Lc, 1, 1, size)),
+        jnp.broadcast_to(in_ok[None, :, None, None, :], (B, Lc, 1, 1, Lc)),
+    ], axis=-1)
+    scores = jnp.where(mask, scores, jnp.finfo(scores.dtype).min)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), -1).astype(q.dtype)
+    v_all = jnp.concatenate([vb, v.astype(q.dtype)], axis=1)
+    y = jnp.einsum("blkgs,bskd->blkgd", probs, v_all)
+    y = y.reshape(B, Lc, hkv * g, v.shape[-1])
+    # Commit the chunk's keys/values to the ring — only the trailing `size`
+    # tokens when the chunk is longer than the ring (duplicate scatter
+    # indices would otherwise race).
+    take = min(Lc, size)
+    b = jnp.arange(B)[:, None]
+    idx = (start[:, None] + (Lc - take)
+           + jnp.arange(take)[None, :]) % size
+    kbuf = cache.k.at[b, idx].set(k[:, Lc - take:].astype(cache.k.dtype))
+    vbuf = cache.v.at[b, idx].set(v[:, Lc - take:].astype(cache.v.dtype))
+    return y, AttnCache(kbuf, vbuf, start + Lc, None, None)
 
 
 def decode_step(spec: AttentionSpec, params: dict | None, q, k, v,
@@ -133,14 +217,24 @@ def decode_step(spec: AttentionSpec, params: dict | None, q, k, v,
         return y, AttnCache(None, None, cache.pos + 1, st.s, st.z)
 
     size = cache.k.shape[-3]
-    slot = cache.pos % size
-    kbuf = jax.lax.dynamic_update_index_in_dim(
-        cache.k, k.astype(cache.k.dtype), slot, axis=-3)
-    vbuf = jax.lax.dynamic_update_index_in_dim(
-        cache.v, v.astype(cache.v.dtype), slot, axis=-3)
-    # Validity mask: ring slots written so far (and inside the window).
+    ring = cache.pos % size
     n_seen = cache.pos + 1
-    valid = jnp.arange(size) < jnp.minimum(n_seen, size)
+    if cache.pos.ndim:
+        # Per-slot positions (continuous batching): each batch row writes
+        # its own ring slot and carries its own validity horizon.
+        b = jnp.arange(cache.pos.shape[0])
+        kbuf = cache.k.at[b, ring].set(k.astype(cache.k.dtype))
+        vbuf = cache.v.at[b, ring].set(v.astype(cache.v.dtype))
+        valid = (jnp.arange(size)[None, :]
+                 < jnp.minimum(n_seen, size)[:, None])    # (B, S)
+        valid = valid[:, None, None, :]                   # vs (B,Hkv,G,S)
+    else:
+        kbuf = jax.lax.dynamic_update_index_in_dim(
+            cache.k, k.astype(cache.k.dtype), ring, axis=-3)
+        vbuf = jax.lax.dynamic_update_index_in_dim(
+            cache.v, v.astype(cache.v.dtype), ring, axis=-3)
+        # Validity mask: ring slots written so far (inside the window).
+        valid = jnp.arange(size) < jnp.minimum(n_seen, size)
     h, dh = q.shape[-2], q.shape[-1]
     hkv, dv = kbuf.shape[-2], vbuf.shape[-1]
     g = h // hkv

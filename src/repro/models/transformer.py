@@ -22,7 +22,7 @@ import numpy as np
 from jax.ad_checkpoint import checkpoint_name
 
 from repro.configs.base import ArchConfig
-from repro.core.slay import AttentionSpec, slay_init
+from repro.core.slay import slay_init
 from repro.distributed.sharding import constrain
 from repro.models import attention as attn
 from repro.models import ssm
@@ -249,11 +249,16 @@ def loss_fn(params: dict, cfg: ArchConfig, batch: dict, *,
 
 
 class DecodeCache(NamedTuple):
-    """Stacked (num_layers leading) per-layer decode state."""
+    """Stacked (num_layers leading) per-layer decode state.
+
+    ``pos`` is per slot — (B,) int32 — so a serving slot pool can hold
+    sequences of different lengths (continuous batching): each slot's ring
+    writes, validity masks, and RoPE phases advance independently.
+    """
 
     attn: attn.AttnCache | None
     ssm: ssm.SsmState | None
-    pos: jnp.ndarray                # scalar int32 tokens generated
+    pos: jnp.ndarray                # (B,) int32 tokens seen per slot
 
 
 def _needs_kv(cfg: ArchConfig, max_len: int) -> bool:
@@ -284,14 +289,15 @@ def init_cache(cfg: ArchConfig, batch: int, max_len: int) -> DecodeCache:
             if lin_needed else None
         z = jnp.zeros((nl, batch, cfg.num_kv_heads, m), jnp.float32) \
             if lin_needed else None
-        a_cache = attn.AttnCache(k, v, jnp.zeros((nl,), jnp.int32), s, z)
+        a_cache = attn.AttnCache(k, v, jnp.zeros((nl, batch), jnp.int32),
+                                 s, z)
     if cfg.family in ("ssm", "hybrid"):
         st = ssm.ssd_init_state((batch,), cfg.d_model, cfg.ssm_state,
                                 cfg.ssm_expand, cfg.ssm_head_dim,
                                 cfg.ssm_ngroups, cfg.ssm_conv_width)
         s_cache = ssm.SsmState(jnp.zeros((nl, *st.h.shape), jnp.float32),
                                jnp.zeros((nl, *st.conv.shape), jnp.float32))
-    return DecodeCache(a_cache, s_cache, jnp.zeros((), jnp.int32))
+    return DecodeCache(a_cache, s_cache, jnp.zeros((batch,), jnp.int32))
 
 
 def decode_step(params: dict, cfg: ArchConfig, cache: DecodeCache,
@@ -321,7 +327,7 @@ def decode_step(params: dict, cfg: ArchConfig, cache: DecodeCache,
         if cfg.qk_norm:
             q = rmsnorm(lp["attn"]["q_norm"], q)
             k = rmsnorm(lp["attn"]["k_norm"], k)
-        p1 = pos[None, None]
+        p1 = pos[:, None]                     # (B, 1) per-slot positions
         q = rope(q[:, None], p1, cfg.rope_theta)[:, 0]
         k = rope(k[:, None], p1, cfg.rope_theta)[:, 0]
         spec_g = cfg.attention_spec(local=False)
@@ -377,10 +383,12 @@ def prefill(params: dict, cfg: ArchConfig, tokens: jnp.ndarray, *,
             max_len: int | None = None) -> tuple[jnp.ndarray, DecodeCache]:
     """Process a full prompt; return last-token logits + a primed cache.
 
-    ``max_len`` sizes the KV ring buffer (prompt + headroom for generated
-    tokens); linear/SSM state paths are length-independent. Implemented as
-    forward for logits + per-layer cache construction in a second scan
-    (keeps the hot forward path allocation-free).
+    ``max_len`` sizes the KV ring buffer exactly when given (so a pooled
+    serving cache and a per-request prefill cache agree shape-for-shape);
+    when omitted, prompt + 64 tokens of decode headroom. Linear/SSM state
+    paths are length-independent either way. Implemented as forward for
+    logits + per-layer cache construction in a second scan (keeps the hot
+    forward path allocation-free).
     """
     B = tokens.shape[0]
     x = embed(params["embed"], tokens).astype(cfg.activation_dtype)
@@ -390,7 +398,7 @@ def prefill(params: dict, cfg: ArchConfig, tokens: jnp.ndarray, *,
     positions = jnp.arange(L, dtype=jnp.int32)[None, :]
     slay_params = params.get("slay")
     kinds = jnp.asarray(_layer_kinds(cfg))
-    cache0 = init_cache(cfg, B, max(max_len or 0, L + 64))
+    cache0 = init_cache(cfg, B, max_len if max_len else L + 64)
 
     def body(carry, scanned):
         x, _aux = carry
@@ -468,7 +476,114 @@ def prefill(params: dict, cfg: ArchConfig, tokens: jnp.ndarray, *,
     table = params.get("unembed", params["embed"])
     logits = unembed(table, x, cfg.final_logit_softcap)
     return logits[:, None, :], DecodeCache(
-        new.get("attn"), new.get("ssm"), jnp.asarray(L, jnp.int32))
+        new.get("attn"), new.get("ssm"), jnp.full((B,), L, jnp.int32))
+
+
+def reset_slot(cfg: ArchConfig, cache: DecodeCache,
+               slot: int) -> DecodeCache:
+    """Zero one slot of a pooled decode cache (eviction).
+
+    Constant-state path: the (S, z) accumulators zero — a single overwrite,
+    the serving asymmetry SLAY buys us. KV path: the slot's ring zeroes and
+    its pos resets, which is equivalent to eviction because validity is
+    derived from pos. Every other slot's bytes are untouched, so the cache
+    sharding (slot-stable by construction) never changes.
+    """
+    z1 = jax.tree.map(lambda x: x.at[:, slot].set(0), cache.attn)
+    zs = jax.tree.map(lambda x: x.at[:, slot].set(0), cache.ssm)
+    return DecodeCache(z1, zs, cache.pos.at[slot].set(0))
+
+
+def write_slot(cfg: ArchConfig, cache: DecodeCache, src: DecodeCache,
+               slot: int) -> DecodeCache:
+    """Install a single-sequence cache (batch=1, e.g. a freshly prefilled
+    request) into slot ``slot`` of a pooled cache (admission). Pool and
+    source must be built from the same cfg/max_len so leaf shapes agree."""
+    wa = jax.tree.map(lambda dst, s: dst.at[:, slot].set(s[:, 0]),
+                      cache.attn, src.attn)
+    ws = jax.tree.map(lambda dst, s: dst.at[:, slot].set(s[:, 0]),
+                      cache.ssm, src.ssm)
+    return DecodeCache(wa, ws, cache.pos.at[slot].set(src.pos[0]))
+
+
+def supports_chunked_prefill(cfg: ArchConfig) -> bool:
+    """Chunked prefill continuation is implemented for pure-attention
+    decoders whose backends have an incremental form: every linear kind and
+    softmax (incl. windowed local layers). SSM/hybrid conv+scan carries and
+    the exact quadratic yat kinds fall back to whole-prompt prefill."""
+    if cfg.family in ("ssm", "hybrid", "encdec"):
+        return False
+    if cfg.frontend:
+        return False
+    spec = cfg.attention_spec()
+    return spec.is_linear or spec.kind == "softmax"
+
+
+def prefill_chunk(params: dict, cfg: ArchConfig, cache: DecodeCache,
+                  tokens: jnp.ndarray) -> tuple[jnp.ndarray, DecodeCache]:
+    """Absorb one prompt chunk into an existing decode cache.
+
+    tokens (B, Lc); ``cache`` holds the state of the previously absorbed
+    prefix (per-slot ``pos``). Returns last-token logits (B, 1, V) and the
+    advanced cache — so a prompt fed chunk-by-chunk ends in the same state
+    (exactly for the fp32 linear recurrence; up to fp roundoff for softmax)
+    as a whole-prompt :func:`prefill`, letting the serving engine interleave
+    prefill progress with decode ticks instead of stalling the pool.
+    """
+    if not supports_chunked_prefill(cfg):
+        raise NotImplementedError(
+            f"chunked prefill unsupported for {cfg.name} "
+            f"(family={cfg.family}, attn_kind={cfg.attn_kind})")
+    B, Lc = tokens.shape
+    x = embed(params["embed"], tokens).astype(cfg.activation_dtype)
+    positions = cache.pos[:, None] + jnp.arange(Lc, dtype=jnp.int32)[None, :]
+    slay_params = params.get("slay")
+    kinds = jnp.asarray(_layer_kinds(cfg))
+
+    def body(x, scanned):
+        lp, is_local = scanned["params"], scanned["kind"]
+        xa = rmsnorm(lp["pre_attn"], x)
+        q = jnp.einsum("bld,dhk->blhk", xa, lp["attn"]["wq"])
+        k = jnp.einsum("bld,dhk->blhk", xa, lp["attn"]["wk"])
+        v = jnp.einsum("bld,dhk->blhk", xa, lp["attn"]["wv"])
+        if cfg.qk_norm:
+            q = rmsnorm(lp["attn"]["q_norm"], q)
+            k = rmsnorm(lp["attn"]["k_norm"], k)
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+        spec_g = cfg.attention_spec(local=False)
+        ac = scanned["attn"]
+        if cfg.local_global_period and cfg.local_window:
+            spec_l = cfg.attention_spec(local=True)
+
+            def _local():
+                y, c = attn.prefill_chunk(spec_l, None, q, k, v, ac)
+                return y, _merge_cache(ac, c)
+
+            def _global():
+                y, c = attn.prefill_chunk(spec_g, slay_params, q, k, v, ac)
+                return y, _merge_cache(ac, c)
+
+            y, nac = jax.lax.cond(is_local == 1, _local, _global)
+        else:
+            y, nac = attn.prefill_chunk(spec_g, slay_params, q, k, v, ac)
+        a = jnp.einsum("blhk,hkd->bld", y, lp["attn"]["wo"])
+        x = x + a
+        xm = rmsnorm(lp["pre_mlp"], x)
+        if cfg.moe_experts:
+            y2, _ = moe(lp["moe"], xm, cfg.moe_experts, cfg.moe_top_k)
+        else:
+            y2 = mlp(lp["mlp"], xm, cfg.gated_mlp)
+        return x + y2, {"attn": nac}
+
+    scanned = {"params": params["layers"], "kind": kinds,
+               "attn": cache.attn}
+    x, new = jax.lax.scan(body, x, scanned)
+    x = rmsnorm(params["final_norm"], x[:, -1])
+    table = params.get("unembed", params["embed"])
+    logits = unembed(table, x, cfg.final_logit_softcap)
+    return logits[:, None, :], DecodeCache(new["attn"], None,
+                                           cache.pos + Lc)
 
 
 def _merge_cache(template: attn.AttnCache, new: attn.AttnCache):

@@ -165,7 +165,7 @@ def init_cache(cfg: ArchConfig, batch: int, max_len: int) -> WhisperCache:
          else attn._baseline_dim(spec, dh)) if spec.is_linear else cfg.enc_seq
     if spec.is_linear:
         a = attn.AttnCache(
-            None, None, jnp.zeros((nl,), jnp.int32),
+            None, None, jnp.zeros((nl, batch), jnp.int32),
             jnp.zeros((nl, batch, cfg.num_kv_heads, m, dh), jnp.float32),
             jnp.zeros((nl, batch, cfg.num_kv_heads, m), jnp.float32))
         cs = jnp.zeros((nl, batch, cfg.num_kv_heads, m, dh), jnp.float32)
@@ -176,13 +176,43 @@ def init_cache(cfg: ArchConfig, batch: int, max_len: int) -> WhisperCache:
                       cfg.activation_dtype),
             jnp.zeros((nl, batch, max_len, cfg.num_kv_heads, dh),
                       cfg.activation_dtype),
-            jnp.zeros((nl,), jnp.int32), None, None)
+            jnp.zeros((nl, batch), jnp.int32), None, None)
         # Softmax cross: store encoder k/v per layer.
         cs = jnp.zeros((nl, batch, cfg.enc_seq, cfg.num_kv_heads, dh),
                        jnp.float32)
         cz = jnp.zeros((nl, batch, cfg.enc_seq, cfg.num_kv_heads, dh),
                        jnp.float32)
-    return WhisperCache(a, cs, cz, jnp.zeros((), jnp.int32))
+    return WhisperCache(a, cs, cz, jnp.zeros((batch,), jnp.int32))
+
+
+def reset_slot(cfg: ArchConfig, cache: WhisperCache,
+               slot: int) -> WhisperCache:
+    """Zero one slot of a pooled decode cache (eviction); see
+    transformer.reset_slot."""
+    a = jax.tree.map(lambda x: x.at[:, slot].set(0), cache.self_attn)
+    return WhisperCache(a, cache.cross_s.at[:, slot].set(0),
+                        cache.cross_z.at[:, slot].set(0),
+                        cache.pos.at[slot].set(0))
+
+
+def write_slot(cfg: ArchConfig, cache: WhisperCache, src: WhisperCache,
+               slot: int) -> WhisperCache:
+    """Install a batch=1 request cache into a pooled cache slot."""
+    a = jax.tree.map(lambda dst, s: dst.at[:, slot].set(s[:, 0]),
+                     cache.self_attn, src.self_attn)
+    return WhisperCache(a, cache.cross_s.at[:, slot].set(src.cross_s[:, 0]),
+                        cache.cross_z.at[:, slot].set(src.cross_z[:, 0]),
+                        cache.pos.at[slot].set(src.pos[0]))
+
+
+def supports_chunked_prefill(cfg: ArchConfig) -> bool:
+    """Encoder-decoder prefill re-encodes audio; no incremental form."""
+    return False
+
+
+def prefill_chunk(params: dict, cfg: ArchConfig, cache: WhisperCache,
+                  tokens: jnp.ndarray):
+    raise NotImplementedError("chunked prefill unsupported for encdec")
 
 
 def prefill(params: dict, cfg: ArchConfig, tokens: jnp.ndarray,
@@ -194,7 +224,7 @@ def prefill(params: dict, cfg: ArchConfig, tokens: jnp.ndarray,
     positions = jnp.arange(L, dtype=jnp.int32)[None]
     spec = cfg.attention_spec()
     slay_params = params.get("slay")
-    cache0 = init_cache(cfg, B, max(max_len or 0, L + 64))
+    cache0 = init_cache(cfg, B, max_len if max_len else L + 64)
 
     def body(x, scanned):
         lp = scanned["params"]
@@ -233,7 +263,7 @@ def prefill(params: dict, cfg: ArchConfig, tokens: jnp.ndarray,
     x = rmsnorm(params["final_norm"], x[:, -1])
     logits = unembed(params["embed"], x)
     return logits[:, None], WhisperCache(ys["attn"], ys["cs"], ys["cz"],
-                                         jnp.asarray(L, jnp.int32))
+                                         jnp.full((B,), L, jnp.int32))
 
 
 def decode_step(params: dict, cfg: ArchConfig, cache: WhisperCache,
@@ -250,7 +280,7 @@ def decode_step(params: dict, cfg: ArchConfig, cache: WhisperCache,
         q = jnp.einsum("bd,dhk->bhk", xa, lp["attn"]["wq"])
         k = jnp.einsum("bd,dhk->bhk", xa, lp["attn"]["wk"])
         v = jnp.einsum("bd,dhk->bhk", xa, lp["attn"]["wv"])
-        p1 = pos[None, None]
+        p1 = pos[:, None]                     # (B, 1) per-slot positions
         q = rope(q[:, None], p1, cfg.rope_theta)[:, 0]
         k = rope(k[:, None], p1, cfg.rope_theta)[:, 0]
         y, nac = attn.decode_step(spec, slay_params, q, k, v,

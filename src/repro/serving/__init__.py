@@ -1,2 +1,5 @@
-"""Serving: batched prefill + decode over KV-cache or constant-state paths."""
-from repro.serving.engine import ServingEngine, jit_serve_fns  # noqa
+"""Serving: lockstep + continuous-batching engines over KV-cache or
+constant-state decode paths."""
+from repro.serving.engine import (ContinuousServingEngine,  # noqa: F401
+                                  EngineMetrics, Request, Scheduler,
+                                  ServingEngine, jit_serve_fns)

@@ -1,28 +1,40 @@
-"""Batched serving engine.
+"""Serving engines: continuous batching over a slot-pooled decode cache.
 
-Two cache regimes, selected by the architecture's attention backend:
+Two engines share one model surface (``repro.models.api``):
 
-* **KV-cache path** (softmax/yat baselines): ring-buffer caches, O(S) memory
-  per sequence (window-bounded for local layers).
-* **Constant-state path** (SLAY / linear baselines / SSM): O(m·dv) running
-  state per layer-head, independent of context length — the paper's
-  long-context win. A 500k-token context costs the same decode-state memory
-  as a 1k one (DESIGN.md §6 quantifies ~30x vs a 32k KV cache).
+* :class:`ServingEngine` — the lockstep reference: one prefill per batch,
+  then decode steps in lockstep until every request finishes. Simple,
+  exact, and the parity oracle for the continuous engine.
+* :class:`ContinuousServingEngine` — the production shape: a
+  :class:`Scheduler` owns a fixed pool of ``num_slots`` decode slots;
+  requests queue, are admitted into free slots via *chunked prefill*
+  (interleaved with decode ticks so long prompts never stall the pool),
+  stream tokens per request, and on EOS/max-tokens are evicted by a single
+  slot overwrite — no paging.
 
-The engine drives batched requests: one prefill per batch, then lockstep
-decode steps with greedy/temperature sampling; finished sequences are masked
-(continuation-batching-lite — at production scale slot reuse would attach
-here).
+Why continuous batching is dramatically simpler for SLAY than for KV-cache
+models: the constant-state path's per-slot decode state is O(m·dv) per
+layer-head *regardless of context length*, so admitting a new request is a
+single ``write_slot`` overwrite of a fixed-size block and evicting is a
+``reset_slot`` zero — there is no paged KV allocator, no fragmentation, no
+copy-out. The KV path rides the same surface with ring-buffer slot resets.
+
+Cache shardings come from ``sharding.serving_cache_sharding`` and depend
+only on pool shape — never on which slots are live — so admission/eviction
+never reshard (slot-stable contract).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
+import time
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ArchConfig
+from repro.configs.base import ArchConfig, ServingConfig
 from repro.distributed import sharding as shd
 from repro.models import api
 
@@ -46,7 +58,7 @@ def jit_serve_fns(cfg: ArchConfig, mesh, max_len: int,
     pf = jax.jit(_prefill, in_shardings=(p_sh, b_sh), out_shardings=None)
     if batch is not None:
         c_abs = api.abstract_cache(cfg, batch, max_len)
-        c_sh = shd.cache_sharding(mesh, rules, c_abs)
+        c_sh = shd.serving_cache_sharding(mesh, rules, c_abs)
     else:
         c_sh = None
     dec = jax.jit(
@@ -62,9 +74,32 @@ class Request:
     prompt: np.ndarray               # (Lp,) int32
     max_new_tokens: int = 32
     eos_id: int = -1                 # -1: never stop early
+    arrival_time: float = 0.0        # engine ticks (continuous engine only)
+    on_token: Callable[[int, int], None] | None = None  # (rid, token)
+
+
+def _model_batch(cfg: ArchConfig, tokens: jnp.ndarray) -> dict:
+    """Token batch plus zero frontend stand-ins (vision/audio stubs)."""
+    batch = {"tokens": tokens}
+    B = tokens.shape[0]
+    if cfg.frontend == "vision":
+        batch["patch_embeds"] = jnp.zeros(
+            (B, cfg.num_patches, cfg.d_model), cfg.activation_dtype)
+    if cfg.frontend == "audio":
+        batch["frame_embeds"] = jnp.zeros(
+            (B, cfg.enc_seq, cfg.d_model), cfg.activation_dtype)
+    return batch
 
 
 class ServingEngine:
+    """Lockstep reference engine (parity oracle for the continuous path).
+
+    NOTE: batched generate left-pads prompts to a common length, so with
+    mixed prompt lengths the pad tokens are visible to the model (seed
+    behavior, kept for the oracle). For exact per-request results, call
+    with a single request — the continuous engine's parity tests do.
+    """
+
     def __init__(self, cfg: ArchConfig, params, mesh, *, max_len: int = 4096,
                  rules: shd.ShardingRules = shd.DEFAULT_RULES):
         self.cfg, self.params, self.mesh = cfg, params, mesh
@@ -74,40 +109,49 @@ class ServingEngine:
 
     def generate(self, requests: list[Request], *,
                  temperature: float = 0.0, seed: int = 0) -> list[np.ndarray]:
-        """Run a batch of requests to completion; returns generated ids."""
+        """Run a batch of requests to completion.
+
+        Returns one int32 array per request, of the *actual* generated
+        length: up to and including the EOS token when ``eos_id`` fires,
+        ``max_new_tokens`` otherwise (no trailing zero padding).
+        """
         cfg = self.cfg
         B = len(requests)
         lp = max(len(r.prompt) for r in requests)
+        over = max(lp + r.max_new_tokens for r in requests)
+        if over > self.max_len:
+            # Non-windowed KV rings would silently truncate the context.
+            raise ValueError(f"prompt+max_new ({over}) exceeds "
+                             f"max_len {self.max_len}")
         # Left-pad prompts to a common length (pad id 0).
         prompts = np.zeros((B, lp), np.int32)
         for i, r in enumerate(requests):
             prompts[i, lp - len(r.prompt):] = r.prompt
-        batch = {"tokens": jnp.asarray(prompts)}
-        if cfg.frontend == "vision":
-            batch["patch_embeds"] = jnp.zeros(
-                (B, cfg.num_patches, cfg.d_model), cfg.activation_dtype)
-        if cfg.frontend == "audio":
-            batch["frame_embeds"] = jnp.zeros(
-                (B, cfg.enc_seq, cfg.d_model), cfg.activation_dtype)
+        batch = _model_batch(cfg, jnp.asarray(prompts))
         with self.mesh:
             logits, cache = self.prefill_fn(self.params, batch)
             key = jax.random.PRNGKey(seed)
             max_new = max(r.max_new_tokens for r in requests)
             out = np.zeros((B, max_new), np.int32)
+            lengths = np.zeros(B, np.int64)
             done = np.zeros(B, bool)
             tok = self._sample(logits, temperature, key)
             for t in range(max_new):
-                out[:, t] = np.where(done, 0, np.asarray(tok[:, 0]))
+                tok_np = np.asarray(tok[:, 0])
                 for i, r in enumerate(requests):
+                    if done[i]:
+                        continue
+                    out[i, t] = tok_np[i]
+                    lengths[i] += 1
                     if (t + 1 >= r.max_new_tokens
-                            or int(out[i, t]) == r.eos_id):
+                            or int(tok_np[i]) == r.eos_id):
                         done[i] = True
                 if done.all():
                     break
                 key, sub = jax.random.split(key)
                 logits, cache = self.decode_fn(self.params, cache, tok)
                 tok = self._sample(logits, temperature, sub)
-        return [out[i, :requests[i].max_new_tokens] for i in range(B)]
+        return [out[i, :lengths[i]] for i in range(B)]
 
     @staticmethod
     def _sample(logits, temperature: float, key) -> jnp.ndarray:
@@ -116,3 +160,391 @@ class ServingEngine:
             return jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
         g = jax.random.categorical(key, logits / temperature)
         return g.astype(jnp.int32)[:, None]
+
+
+# ---------------------------------------------------------------------------
+# Continuous batching
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class RequestStats:
+    rid: int
+    arrival: float                   # ticks
+    prompt_len: int = 0
+    slot: int | None = None          # pool slot served in
+    admitted: float | None = None    # prefill started
+    first_token: float | None = None
+    finished: float | None = None
+    first_token_wall: float | None = None
+    arrival_wall: float | None = None
+
+    @property
+    def ttft_ticks(self) -> float | None:
+        if self.first_token is None:
+            return None
+        return self.first_token - self.arrival
+
+    @property
+    def ttft_s(self) -> float | None:
+        if self.first_token_wall is None or self.arrival_wall is None:
+            return None
+        return self.first_token_wall - self.arrival_wall
+
+
+@dataclasses.dataclass
+class EngineMetrics:
+    """Counters the engine updates every tick; ``summary()`` aggregates."""
+
+    num_slots: int = 0
+    ticks: int = 0
+    decode_ticks: int = 0
+    prefill_ticks: int = 0
+    tokens_generated: int = 0
+    prompt_tokens: int = 0
+    requests_completed: int = 0
+    queue_depth_sum: int = 0
+    queue_depth_max: int = 0
+    occupancy_sum: int = 0
+    wall_start: float = dataclasses.field(default_factory=time.perf_counter)
+    per_request: dict = dataclasses.field(default_factory=dict)
+
+    def sample(self, queue_depth: int, occupancy: int):
+        self.queue_depth_sum += queue_depth
+        self.queue_depth_max = max(self.queue_depth_max, queue_depth)
+        self.occupancy_sum += occupancy
+
+    def summary(self) -> dict:
+        wall = max(time.perf_counter() - self.wall_start, 1e-9)
+        ttfts = sorted(s.ttft_ticks for s in self.per_request.values()
+                       if s.ttft_ticks is not None)
+        ttfts_s = sorted(s.ttft_s for s in self.per_request.values()
+                         if s.ttft_s is not None)
+
+        def pct(xs, q):
+            return xs[min(int(q * len(xs)), len(xs) - 1)] if xs else None
+
+        t = max(self.ticks, 1)
+        return {
+            "ticks": self.ticks,
+            "decode_ticks": self.decode_ticks,
+            "prefill_ticks": self.prefill_ticks,
+            "requests_completed": self.requests_completed,
+            "tokens_generated": self.tokens_generated,
+            "prompt_tokens": self.prompt_tokens,
+            "wall_s": wall,
+            "decode_tokens_per_s": self.tokens_generated / wall,
+            "total_tokens_per_s":
+                (self.tokens_generated + self.prompt_tokens) / wall,
+            "mean_queue_depth": self.queue_depth_sum / t,
+            "max_queue_depth": self.queue_depth_max,
+            "mean_slot_occupancy":
+                self.occupancy_sum / (t * max(self.num_slots, 1)),
+            "ttft_ticks_p50": pct(ttfts, 0.50),
+            "ttft_ticks_p95": pct(ttfts, 0.95),
+            "ttft_s_p50": pct(ttfts_s, 0.50),
+            "ttft_s_p95": pct(ttfts_s, 0.95),
+        }
+
+
+@dataclasses.dataclass
+class _Slot:
+    """One live sequence in the decode pool."""
+
+    rid: int
+    req: Request
+    last_tok: int
+    tokens: list = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class _Prefill:
+    """An admission in flight: prompt being absorbed chunk-by-chunk."""
+
+    rid: int
+    req: Request
+    slot: int
+    cache: object                    # per-request (batch=1) decode cache
+    offset: int = 0                  # prompt tokens absorbed so far
+
+
+class Scheduler:
+    """Owns the slot pool and the admission queue.
+
+    Policy: FIFO admission into the lowest free slot; at most one prefill
+    in flight (chunked, so a long prompt yields to decode ticks between
+    chunks); decode and prefill strictly interleave per
+    ``decode_ticks_per_prefill`` when both have work.
+    """
+
+    def __init__(self, serving: ServingConfig):
+        self.serving = serving
+        self.free: list[int] = list(range(serving.num_slots))
+        self.active: dict[int, _Slot] = {}
+        self.waiting: collections.deque = collections.deque()  # (rid, req)
+        self.ready: collections.deque = collections.deque()
+        self._decode_since_prefill = serving.decode_ticks_per_prefill
+
+    def submit(self, rid: int, req: Request):
+        if (self.serving.max_queue
+                and len(self.waiting) + len(self.ready)
+                >= self.serving.max_queue):
+            raise RuntimeError("admission queue full")
+        self.waiting.append((rid, req))
+        # Keep ordered by (arrival, rid) so a late submission with an
+        # earlier arrival_time cannot be head-of-line blocked.
+        self.waiting = collections.deque(
+            sorted(self.waiting, key=lambda t: (t[1].arrival_time, t[0])))
+
+    def poll_arrivals(self, now: float):
+        while self.waiting and self.waiting[0][1].arrival_time <= now:
+            self.ready.append(self.waiting.popleft())
+
+    def next_admission(self):
+        """Pop the request to admit next, reserving a slot — or None."""
+        if not self.ready or not self.free:
+            return None
+        rid, req = self.ready.popleft()
+        return rid, req, self.free.pop(0)
+
+    def evict(self, slot: int):
+        del self.active[slot]
+        self.free.append(slot)
+        self.free.sort()
+
+    @property
+    def queue_depth(self) -> int:
+        return len(self.ready)
+
+    @property
+    def occupancy(self) -> int:
+        return len(self.active)
+
+    def want_prefill(self, prefill_inflight: bool) -> bool:
+        """Interleave policy: prefill only after enough decode ticks, unless
+        there is no decode work at all."""
+        has_work = prefill_inflight or (bool(self.ready) and bool(self.free))
+        if not has_work:
+            return False
+        if not self.active:
+            return True
+        return (self._decode_since_prefill
+                >= self.serving.decode_ticks_per_prefill)
+
+    def note_decode(self):
+        self._decode_since_prefill += 1
+
+    def note_prefill(self):
+        self._decode_since_prefill = 0
+
+
+class ContinuousServingEngine:
+    """Continuous-batching engine over a fixed decode-slot pool.
+
+    Usage::
+
+        eng = ContinuousServingEngine(cfg, params, mesh,
+                                      serving=ServingConfig(num_slots=4))
+        rids = [eng.submit(r) for r in requests]
+        outs, metrics = eng.run()          # rid -> np.ndarray of tokens
+
+    or drive it tick-by-tick with :meth:`step` for external event loops.
+    Time is a logical tick counter (one device dispatch per tick); request
+    ``arrival_time`` is in ticks, letting benchmarks replay arrival traces
+    deterministically on any backend.
+
+    Compile-cache note: the chunked prefill path compiles once per distinct
+    chunk length (at most the full-chunk shape plus the ragged final-chunk
+    remainders, bounded by ``prefill_chunk``); the non-chunkable fallback
+    (yat kinds, SSM/hybrid, frontends) compiles per distinct prompt length.
+    Length-bucketed padding for those paths is a tracked ROADMAP item.
+    """
+
+    def __init__(self, cfg: ArchConfig, params, mesh, *,
+                 serving: ServingConfig = ServingConfig(),
+                 rules: shd.ShardingRules = shd.DEFAULT_RULES):
+        self.cfg, self.params, self.mesh = cfg, params, mesh
+        self.serving = serving
+        self.rules = rules
+        self.sched = Scheduler(serving)
+        self.metrics = EngineMetrics(num_slots=serving.num_slots)
+        self.tick = 0
+        self._next_rid = 0
+        self._outputs: dict[int, list] = {}
+        self._prefill: _Prefill | None = None
+        self._chunkable = api.supports_chunked_prefill(cfg)
+
+        S, L = serving.num_slots, serving.max_len
+        axes = api.param_axes(cfg)
+        p_abs = api.abstract_params(cfg)
+        p_sh = shd.logical_to_sharding(mesh, rules, p_abs, axes)
+        c_abs = api.abstract_cache(cfg, S, L)
+        c_sh = shd.serving_cache_sharding(mesh, rules, c_abs)
+        b_sh = shd.batch_sharding(mesh, rules)
+        with mesh:
+            self.pool = jax.device_put(api.init_cache(cfg, S, L), c_sh)
+        self._decode_fn = jax.jit(
+            lambda p, c, t: api.decode_step(p, cfg, c, t),
+            in_shardings=(p_sh, c_sh, b_sh),
+            out_shardings=(b_sh, c_sh), donate_argnums=(1,))
+        # Slot ops: slot index is a traced scalar -> one compile each, and
+        # out-shardings pinned to the pool's (slot-stable, never reshards).
+        self._write_fn = jax.jit(
+            lambda pool, src, i: api.write_slot(cfg, pool, src, i),
+            in_shardings=(c_sh, None, None), out_shardings=c_sh,
+            donate_argnums=(0,))
+        self._reset_fn = jax.jit(
+            lambda pool, i: api.reset_slot(cfg, pool, i),
+            in_shardings=(c_sh, None), out_shardings=c_sh,
+            donate_argnums=(0,))
+        self._chunk_fn = jax.jit(
+            lambda p, c, t: api.prefill_chunk(cfg, p, c, t),
+            donate_argnums=(1,))
+        self._prefill_fn = jax.jit(
+            lambda p, b: api.prefill(p, cfg, b, max_len=L))
+
+    # -- submission ---------------------------------------------------------
+
+    def submit(self, req: Request) -> int:
+        """Queue a request; returns its request id."""
+        if len(req.prompt) + req.max_new_tokens > self.serving.max_len:
+            raise ValueError(
+                f"prompt+max_new ({len(req.prompt)}+{req.max_new_tokens}) "
+                f"exceeds max_len {self.serving.max_len}")
+        rid = self._next_rid
+        self._next_rid += 1
+        self.sched.submit(rid, req)
+        st = RequestStats(rid=rid, arrival=req.arrival_time,
+                          prompt_len=len(req.prompt))
+        st.arrival_wall = time.perf_counter()
+        self.metrics.per_request[rid] = st
+        self._outputs[rid] = []
+        return rid
+
+    # -- engine ticks -------------------------------------------------------
+
+    def step(self) -> bool:
+        """One engine tick: a prefill chunk or a decode step (whichever the
+        interleave policy picks). Returns False when fully idle."""
+        sched = self.sched
+        sched.poll_arrivals(self.tick)
+        self.metrics.sample(sched.queue_depth, sched.occupancy)
+        did = False
+        with self.mesh:
+            if sched.want_prefill(self._prefill is not None):
+                self._prefill_tick()
+                sched.note_prefill()
+                self.metrics.prefill_ticks += 1
+                did = True
+            elif sched.active:
+                self._decode_tick()
+                sched.note_decode()
+                self.metrics.decode_ticks += 1
+                did = True
+        self.tick += 1
+        self.metrics.ticks = self.tick
+        return did or bool(sched.waiting)
+
+    def run(self, requests: list[Request] | None = None, *,
+            max_ticks: int | None = None):
+        """Drive to completion. Returns (outputs, metrics summary) where
+        outputs maps rid -> int32 array of that request's generated tokens
+        (actual length: through EOS inclusive, or max_new_tokens)."""
+        for r in requests or ():
+            self.submit(r)
+        limit = max_ticks if max_ticks is not None else 10_000_000
+        while self.tick < limit:
+            if not (self.sched.active or self.sched.ready
+                    or self.sched.waiting or self._prefill):
+                break
+            self.step()
+        outs = {rid: np.asarray(toks, np.int32)
+                for rid, toks in self._outputs.items()}
+        return outs, self.metrics.summary()
+
+    # -- internals ----------------------------------------------------------
+
+    def _prefill_tick(self):
+        pf = self._prefill
+        if pf is None:
+            admission = self.sched.next_admission()
+            if admission is None:
+                return
+            rid, req, slot = admission
+            pf = _Prefill(rid, req, slot,
+                          api.init_cache(self.cfg, 1, self.serving.max_len))
+            self._prefill = pf
+            self.metrics.per_request[rid].admitted = self.tick
+            self.metrics.per_request[rid].slot = slot
+        req, prompt = pf.req, np.asarray(pf.req.prompt, np.int32)
+        C = self.serving.prefill_chunk
+        if self._chunkable and C:
+            chunk = prompt[pf.offset:pf.offset + C]
+            toks = jnp.asarray(chunk[None, :])
+            logits, pf.cache = self._chunk_fn(self.params, pf.cache, toks)
+            pf.offset += len(chunk)
+        else:
+            batch = _model_batch(self.cfg, jnp.asarray(prompt[None, :]))
+            logits, pf.cache = self._prefill_fn(self.params, batch)
+            pf.offset = len(prompt)
+        if pf.offset < len(prompt):
+            return                       # more chunks; decode may interleave
+        # Prompt fully absorbed: first token, install into the pool slot.
+        tok0 = self._sample_token(
+            np.asarray(logits[0, -1], np.float32), pf.rid, 0)
+        self.pool = self._write_fn(self.pool, pf.cache, jnp.int32(pf.slot))
+        self._prefill = None
+        self.metrics.prompt_tokens += len(prompt)
+        slot_rec = _Slot(pf.rid, req, tok0)
+        self.sched.active[pf.slot] = slot_rec
+        self._emit(slot_rec, tok0)
+        if tok0 == req.eos_id or req.max_new_tokens <= 1:
+            self._finish(pf.slot)
+
+    def _decode_tick(self):
+        S = self.serving.num_slots
+        tok = np.zeros((S, 1), np.int32)
+        for slot, rec in self.sched.active.items():
+            tok[slot, 0] = rec.last_tok
+        logits, self.pool = self._decode_fn(self.params, self.pool,
+                                            jnp.asarray(tok))
+        rows = np.asarray(logits[:, -1], np.float32)
+        for slot in list(self.sched.active):
+            rec = self.sched.active[slot]
+            t = self._sample_token(rows[slot], rec.rid, len(rec.tokens))
+            rec.last_tok = t
+            self._emit(rec, t)
+            if (t == rec.req.eos_id
+                    or len(rec.tokens) >= rec.req.max_new_tokens):
+                self._finish(slot)
+
+    def _sample_token(self, row: np.ndarray, rid: int, idx: int) -> int:
+        """Greedy, or per-request deterministic Gumbel sampling keyed on
+        (engine seed, rid, token index) — independent of slot placement and
+        batch composition, so replays are reproducible."""
+        T = self.serving.temperature
+        if T <= 0.0:
+            return int(np.argmax(row))
+        rng = np.random.default_rng((self.serving.seed, rid, idx))
+        return int(np.argmax(row / T + rng.gumbel(size=row.shape)))
+
+    def _emit(self, rec: _Slot, tok: int):
+        rec.tokens.append(tok)
+        self._outputs[rec.rid].append(tok)
+        self.metrics.tokens_generated += 1
+        st = self.metrics.per_request[rec.rid]
+        if st.first_token is None:
+            st.first_token = self.tick
+            st.first_token_wall = time.perf_counter()
+        if rec.req.on_token is not None:
+            rec.req.on_token(rec.rid, tok)
+
+    def _finish(self, slot: int):
+        rec = self.sched.active[slot]
+        st = self.metrics.per_request[rec.rid]
+        st.finished = self.tick
+        self.metrics.requests_completed += 1
+        # Eviction = one slot overwrite (constant-state asymmetry: O(m·dv)
+        # zeros for SLAY vs an O(max_len) ring zero for KV backends).
+        self.pool = self._reset_fn(self.pool, jnp.int32(slot))
+        self.sched.evict(slot)

@@ -21,3 +21,6 @@ def pytest_configure(config):
     config.addinivalue_line(
         "markers",
         "kernels: interpret-mode Pallas kernel tests (pytest -m kernels)")
+    config.addinivalue_line(
+        "markers",
+        "serving: continuous-batching serving tests (pytest -m serving)")

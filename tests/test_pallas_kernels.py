@@ -150,6 +150,34 @@ def test_decode_kernel_matches_ref(bh, bk, m, dv):
     np.testing.assert_allclose(np.asarray(z_k), np.asarray(z_r), atol=3e-5)
 
 
+@pytest.mark.parametrize("bh,bk,m,dv", [(8, 4, 24, 16), (4, 4, 16, 8)])
+def test_decode_kernel_active_mask(bh, bk, m, dv):
+    """Continuous-batching pool rows: inactive (drained) slots produce zero
+    output and pass their state through bit-identically."""
+    from repro.kernels import decode_step as dk
+    qf = jax.random.uniform(jax.random.PRNGKey(0), (bh, m))
+    kf = jax.random.uniform(jax.random.PRNGKey(1), (bk, m))
+    v = jax.random.normal(jax.random.PRNGKey(2), (bk, dv))
+    s = jax.random.uniform(jax.random.PRNGKey(3), (bk, m, dv))
+    z = jax.random.uniform(jax.random.PRNGKey(4), (bk, m)) + 1.0
+    active = jnp.asarray(np.arange(bk) % 2 == 0, jnp.int32)   # evens live
+    y_k, s_k, z_k = dk.decode_linear_attention(
+        qf, kf, v, s.copy(), z.copy(), active, interpret=True)
+    y_r, s_r, z_r = ref.decode_linear_attention_ref(qf, kf, v, s, z, active)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_r), atol=3e-5,
+                               rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_r), atol=3e-5)
+    np.testing.assert_allclose(np.asarray(z_k), np.asarray(z_r), atol=3e-5)
+    g = bh // bk
+    for row in range(bk):
+        if row % 2:                    # drained
+            np.testing.assert_array_equal(np.asarray(s_k)[row],
+                                          np.asarray(s)[row])
+            np.testing.assert_array_equal(np.asarray(z_k)[row],
+                                          np.asarray(z)[row])
+            assert np.all(np.asarray(y_k)[row * g:(row + 1) * g] == 0)
+
+
 def test_decode_kernel_sequence_consistency():
     """Repeated kernel decode steps == the chunked causal oracle rows."""
     from repro.kernels import decode_step as dk
