@@ -10,7 +10,12 @@ serving perf trajectory CI tracks per PR:
 * ``ttft_ticks_p50`` / ``p95`` — time-to-first-token in engine ticks, a
   backend-independent measure of scheduling latency (queueing + chunked
   prefill) that survives CPU timing noise,
-* ``mean_slot_occupancy`` / ``mean_queue_depth`` — pool pressure.
+* ``mean_slot_occupancy`` / ``mean_queue_depth`` — pool pressure,
+* ``host_syncs_per_token`` / ``tokens_per_dispatch`` /
+  ``dispatches_per_decode_tick`` — the decode hot-loop sync cadence under
+  K-tick macro-stepping (backend-independent: the win the on-device loop
+  buys regardless of accelerator), plus ``jit_cache_entries`` per row —
+  the recompile budget CI gates on.
 
 Both cache regimes run: the constant-state SLAY path (slot overwrite
 eviction) and the KV-ring softmax baseline (same scheduler, O(max_len)
@@ -38,11 +43,14 @@ _JSON_PATH = os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "BENCH_serving.json")
 
 # (requests, max_new, prompt range); load = arrival rate in requests/tick.
-_SMOKE = {"n": 4, "max_new": 4, "prompt": (3, 8), "loads": (0.25, 1.0),
+# max_new >= 2*macro_ticks so every trace amortizes the K-tick macro-step
+# (the host_syncs_per_token <= 1/K contract CI asserts on).
+_MACRO_TICKS = 8
+_SMOKE = {"n": 4, "max_new": 16, "prompt": (3, 8), "loads": (0.25, 1.0),
           "num_slots": 2, "max_len": 32, "prefill_chunk": 4}
-_QUICK = {"n": 10, "max_new": 8, "prompt": (4, 16), "loads": (0.1, 0.5),
+_QUICK = {"n": 10, "max_new": 16, "prompt": (4, 16), "loads": (0.1, 0.5),
           "num_slots": 4, "max_len": 64, "prefill_chunk": 8}
-_FULL = {"n": 32, "max_new": 16, "prompt": (8, 48),
+_FULL = {"n": 32, "max_new": 24, "prompt": (8, 48),
          "loads": (0.05, 0.2, 0.8), "num_slots": 8, "max_len": 128,
          "prefill_chunk": 16}
 
@@ -80,13 +88,24 @@ def run(quick: bool = True, smoke: bool = False):
                 cfg, params, mesh,
                 serving=ServingConfig(num_slots=p["num_slots"],
                                       max_len=p["max_len"],
-                                      prefill_chunk=p["prefill_chunk"]))
+                                      prefill_chunk=p["prefill_chunk"],
+                                      macro_ticks=_MACRO_TICKS))
             outs, summary = eng.run(reqs)
             assert summary["requests_completed"] == p["n"]
+            # Hot-loop contract (backend-independent): one pooled dispatch
+            # covers >= 1 decode tick, and the decode loop syncs to host
+            # at most once per K generated tokens.
+            assert summary["dispatches_per_decode_tick"] <= 1.0 + 1e-9
+            assert summary["host_syncs_per_token"] <= 1.0 / _MACRO_TICKS \
+                + 1e-9, summary["host_syncs_per_token"]
+            jit_entries = eng.jit_cache_entries()
+            # Missing key = jax introspection unavailable, not a recompile.
+            assert jit_entries.get("macro_decode", 1) == 1, jit_entries
             tag = f"serving/{regime}/load{load:g}"
             for key in ("decode_tokens_per_s", "ttft_ticks_p50",
                         "ttft_ticks_p95", "mean_slot_occupancy",
-                        "mean_queue_depth"):
+                        "mean_queue_depth", "host_syncs_per_token",
+                        "tokens_per_dispatch"):
                 unit = ("tok/s" if "per_s" in key
                         else "ticks" if "ttft" in key else "ratio")
                 results.append(BenchResult(
@@ -94,13 +113,14 @@ def run(quick: bool = True, smoke: bool = False):
                     extra={"regime": regime, "load": load}))
             rows.append({"regime": regime, "load": load,
                          "num_slots": p["num_slots"],
-                         "requests": p["n"], **summary})
+                         "requests": p["n"],
+                         "jit_cache_entries": jit_entries, **summary})
 
     payload = {
         "meta": {
             "backend": jax.default_backend(),
             "smoke": smoke, "quick": quick,
-            "params": p,
+            "params": {**p, "macro_ticks": _MACRO_TICKS},
             "note": ("ttft/occupancy are in engine ticks (backend-"
                      "independent scheduling trajectory); *_per_s are "
                      "wall-clock and only meaningful on TPU"),

@@ -156,6 +156,19 @@ class ServingConfig:
     prompts cannot stall the decode pool; ``decode_ticks_per_prefill``
     decode ticks run between consecutive prefill chunks when both kinds of
     work are pending (1 = strict alternation).
+
+    ``macro_ticks`` (K) is the decode macro-step: the engine wraps K decode
+    ticks in one jitted ``lax.scan`` dispatch with fused on-device sampling
+    and pulls a (K, num_slots) token buffer to host once per dispatch
+    instead of a logits matrix per tick. Token streams are byte-identical
+    for any K (sampling is keyed per (seed, rid, token-index)); larger K
+    trades admission/streaming granularity (up to K ticks) for ~K× fewer
+    host syncs and dispatches. K=1 recovers per-tick behavior.
+
+    ``prefill_buckets`` pads non-chunkable prefill fallbacks (exact-yat
+    kinds, frontends) to pow-2 length buckets (>= ``prefill_bucket_min``,
+    capped at ``max_len``) so they compile once per bucket instead of once
+    per distinct prompt length; masked out exactly via ``true_len``.
     """
 
     num_slots: int = 4
@@ -165,12 +178,19 @@ class ServingConfig:
     max_queue: int = 0                # 0 = unbounded admission queue
     temperature: float = 0.0          # 0 = greedy
     seed: int = 0
+    macro_ticks: int = 8              # K decode ticks per device dispatch
+    prefill_buckets: bool = True      # pow-2 bucketing of fallback prefill
+    prefill_bucket_min: int = 16      # smallest bucket
 
     def __post_init__(self):
         if self.num_slots < 1:
             raise ValueError("num_slots must be >= 1")
         if self.prefill_chunk < 0 or self.max_len < 1:
             raise ValueError("bad prefill_chunk/max_len")
+        if self.macro_ticks < 1:
+            raise ValueError("macro_ticks must be >= 1")
+        if self.prefill_bucket_min < 1:
+            raise ValueError("prefill_bucket_min must be >= 1")
 
 
 @dataclasses.dataclass(frozen=True)

@@ -201,6 +201,22 @@ def serving_cache_sharding(mesh: Mesh, rules: ShardingRules, abstract):
     return cache_sharding(mesh, rules, abstract)
 
 
+def serving_vector_sharding(mesh: Mesh) -> NamedSharding:
+    """Replicated sharding for the engine's per-slot control vectors.
+
+    The macro-step decode signature carries (num_slots,)-shaped int32/bool
+    vectors — last token, active mask, request ids, per-slot generation
+    counts / EOS ids / budgets — plus the (K, num_slots) emitted-token
+    buffer it returns. These are a few hundred bytes; every device needs
+    the full active mask and token vector to run its shard of the pool
+    dispatch, so they replicate (sharding them would force an all-gather
+    inside the scan per tick). Pinning P() explicitly keeps the jitted
+    macro-step's in/out shardings fully specified alongside the donated
+    slot-stable cache.
+    """
+    return NamedSharding(mesh, P())
+
+
 def cache_sharding(mesh: Mesh, rules: ShardingRules, abstract):
     """Decode caches: shard the batch dim (first non-layer dim) over
     (pod, data) and head-like dims heuristically over model.

@@ -95,9 +95,10 @@ def decode_linear_attention(qf: jnp.ndarray, kf: jnp.ndarray, v: jnp.ndarray,
     ``active`` (BK,) int/bool masks continuous-batching pool rows: inactive
     (drained) kv rows skip the state update and MXU readout — y rows are 0
     and (s, z) pass through unchanged — so an idle serving slot costs no
-    compute. The masked path is forward-only, built for the serving decode
-    tick; wiring it through the jitted model decode path is a tracked
-    ROADMAP item (the engine currently runs the jnp reference decode).
+    compute. The masked path is forward-only: it is the serving decode
+    tick, dispatched from the engine's jitted macro-step via
+    ``attention.decode_step`` → ``ops.decode_linear_step`` whenever
+    ``spec.use_pallas`` is set (jnp reference off-TPU, same semantics).
     """
     bh, m = qf.shape
     bk = v.shape[0]

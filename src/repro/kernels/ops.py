@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.features import SlayFeatureConfig
+from repro.kernels import decode_step as _dk
 from repro.kernels import feature_map as _fm
 from repro.kernels import ref as _ref
 from repro.kernels import slay_fused as _fused
@@ -120,6 +121,46 @@ def slay_fused_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
             qh, kh, vh, params["anchors"], params["omegas"], cfg,
             chunk_size=chunk_size, delta=delta, interpret=bool(interpret)),
         q, k, v, chunk_size=chunk_size)
+
+
+def decode_linear_step(qf: jnp.ndarray, kf: jnp.ndarray, v: jnp.ndarray,
+                       s: jnp.ndarray, z: jnp.ndarray,
+                       active: jnp.ndarray | None = None, *,
+                       delta: float = 1e-6,
+                       interpret: bool | None = None):
+    """One-token linear-attention decode step from the *model* layout.
+
+    qf (B, H, m), kf (B, Hkv, m), v (B, Hkv, dv), s (B, Hkv, m, dv) fp32,
+    z (B, Hkv, m) fp32 -> (y (B, H, dv), s', z').
+
+    This is the serving decode hot path: the whole slot pool is one fused
+    VMEM-resident Pallas dispatch (grid = B·Hkv kv rows, in-place state
+    RMW). ``active`` (B,) masks continuous-batching pool rows — drained
+    slots skip the state update and MXU readout (y rows zero, (s, z) pass
+    through bit-identical), so an idle slot costs only block pipelining.
+    Falls back to the jnp oracle off-TPU with identical masked semantics.
+    """
+    B, H, m = qf.shape
+    hkv, dv = kf.shape[-2], v.shape[-1]
+    g = H // hkv
+    qh = qf.reshape(B * hkv * g, m)          # model heads are kv-major
+    kh = kf.reshape(B * hkv, m)
+    vh = v.reshape(B * hkv, dv)
+    sh = s.reshape(B * hkv, m, dv)
+    zh = z.reshape(B * hkv, m)
+    ah = None
+    if active is not None:
+        ah = jnp.broadcast_to(active.astype(jnp.int32)[:, None],
+                              (B, hkv)).reshape(B * hkv)
+    if not _use_kernel(interpret):
+        y, s2, z2 = _ref.decode_linear_attention_ref(qh, kh, vh, sh, zh, ah,
+                                                     delta=delta)
+    else:
+        y, s2, z2 = _dk.decode_linear_attention(qh, kh, vh, sh, zh, ah,
+                                                delta=delta,
+                                                interpret=bool(interpret))
+    return (y.reshape(B, H, dv), s2.reshape(B, hkv, m, dv),
+            z2.reshape(B, hkv, m))
 
 
 def slay_features(u: jnp.ndarray, params: dict, cfg: SlayFeatureConfig, *,

@@ -82,15 +82,29 @@ def prefill_chunk(cfg: ArchConfig, params, cache, tokens):
     return _mod(cfg).prefill_chunk(params, cfg, cache, tokens)
 
 
+def supports_masked_prefill(cfg: ArchConfig) -> bool:
+    """Whether prefill accepts ``true_len`` (right-padded prompts) — the
+    enabler for length-bucketed compilation of the non-chunkable serving
+    prefill fallback."""
+    return _mod(cfg).supports_masked_prefill(cfg)
+
+
 def prefill(params, cfg: ArchConfig, batch: dict, *,
-            max_len: int | None = None):
+            max_len: int | None = None, true_len=None):
+    """Absorb a prompt batch. ``true_len`` (B,) int32 marks real lengths of
+    right-padded prompts (see transformer.prefill)."""
     if cfg.family == "encdec":
         return whisper.prefill(params, cfg, batch["tokens"],
-                               batch["frame_embeds"], max_len=max_len)
+                               batch["frame_embeds"], max_len=max_len,
+                               true_len=true_len)
     return transformer.prefill(params, cfg, batch["tokens"],
                                patch_embeds=batch.get("patch_embeds"),
-                               max_len=max_len)
+                               max_len=max_len, true_len=true_len)
 
 
-def decode_step(params, cfg: ArchConfig, cache, tokens):
-    return _mod(cfg).decode_step(params, cfg, cache, tokens)
+def decode_step(params, cfg: ArchConfig, cache, tokens, active=None):
+    """One decode tick. ``active`` (B,) masks continuous-batching pool
+    slots: drained rows are an exact state passthrough with zero attention
+    output (their logits are meaningless — callers sample active rows
+    only), so the pool dispatch stays one fixed-shape jitted call."""
+    return _mod(cfg).decode_step(params, cfg, cache, tokens, active)

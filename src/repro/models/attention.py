@@ -109,19 +109,34 @@ def cross_attention(spec: AttentionSpec, params: dict | None, q, k, v):
 
 
 def prefill_cache(spec: AttentionSpec, params: dict | None, k, v,
-                  cache: AttnCache) -> AttnCache:
+                  cache: AttnCache, valid=None) -> AttnCache:
     """Absorb a full prompt's keys/values into a fresh decode cache.
 
     k/v: (..., L, Hkv, *). Linear kinds reduce to the constant-size state;
     KV kinds write the (window-truncated) suffix into the ring buffer.
+
+    ``valid`` (..., L) bool masks a right-padded prompt (length-bucketed
+    prefill): invalid positions contribute nothing to the state — linear
+    kinds zero their key *features* (exact: the fp32 sums gain literal
+    zeros), KV kinds write zeroed k/v rows that ``pos`` (set to the true
+    length) keeps outside every later validity horizon.
     """
     L = k.shape[-3]
     lead = k.shape[:-3]
-    pos = jnp.full(lead, L, jnp.int32)
+    if valid is None:
+        pos = jnp.full(lead, L, jnp.int32)
+    else:
+        pos = jnp.sum(valid.astype(jnp.int32), axis=-1)
+        pos = jnp.broadcast_to(pos, lead)
     if spec.is_linear:
         kf = _features(spec, params, k)
+        if valid is not None:
+            kf = jnp.where(valid[..., None, None], kf, 0.0)
         st = la.prefill_state(kf, v)
         return AttnCache(None, None, pos, st.s, st.z)
+    if valid is not None:
+        k = jnp.where(valid[..., None, None], k, 0)
+        v = jnp.where(valid[..., None, None], v, 0)
     size = cache.k.shape[-3]
     # Keep the most recent `size` tokens, written at ring positions.
     take = min(L, size)
@@ -208,23 +223,57 @@ def prefill_chunk(spec: AttentionSpec, params: dict | None, q, k, v,
 
 
 def decode_step(spec: AttentionSpec, params: dict | None, q, k, v,
-                cache: AttnCache) -> tuple[jnp.ndarray, AttnCache]:
-    """One token. q (..., H, Dh), k/v (..., Hkv, *) -> (..., H, dv)."""
+                cache: AttnCache, *,
+                active=None) -> tuple[jnp.ndarray, AttnCache]:
+    """One token. q (..., H, Dh), k/v (..., Hkv, *) -> (..., H, dv).
+
+    ``active`` (B,) bool/int masks continuous-batching pool rows: drained
+    slots are an exact state passthrough (linear (S, z) and KV ring bytes
+    bit-identical, ``pos`` frozen) with a zero output row — the same
+    contract as the Pallas decode kernel's active-row mask, so the
+    reference path and the kernel path are interchangeable mid-stream.
+    Requires per-slot (vector) ``pos`` when given.
+    """
+    act = None
+    if active is not None:
+        if cache.pos is None or cache.pos.ndim == 0:
+            raise ValueError("active mask requires per-slot cache.pos")
+        act = active.astype(bool)
     if spec.is_linear:
         qf = _features(spec, params, q)
         kf = _features(spec, params, k)
+        step = 1 if act is None else act.astype(jnp.int32)
+        if spec.use_pallas and qf.ndim == 3:
+            # Serving hot path: single fused Pallas dispatch for the pool
+            # (jnp oracle off-TPU — identical masked semantics).
+            from repro.kernels import ops
+            y, s2, z2 = ops.decode_linear_step(qf, kf, v, cache.s, cache.z,
+                                               active)
+            return y, AttnCache(None, None, cache.pos + step, s2, z2)
         y, st = la.decode_step(qf, kf, v, la.LinearState(cache.s, cache.z))
-        return y, AttnCache(None, None, cache.pos + 1, st.s, st.z)
+        if act is None:
+            return y, AttnCache(None, None, cache.pos + 1, st.s, st.z)
+        s2 = jnp.where(act[:, None, None, None], st.s, cache.s)
+        z2 = jnp.where(act[:, None, None], st.z, cache.z)
+        y = jnp.where(act[:, None, None], y, 0).astype(y.dtype)
+        return y, AttnCache(None, None, cache.pos + step, s2, z2)
 
     size = cache.k.shape[-3]
     ring = cache.pos % size
-    n_seen = cache.pos + 1
+    n_seen = cache.pos + (1 if act is None else act.astype(jnp.int32))
     if cache.pos.ndim:
         # Per-slot positions (continuous batching): each batch row writes
         # its own ring slot and carries its own validity horizon.
         b = jnp.arange(cache.pos.shape[0])
-        kbuf = cache.k.at[b, ring].set(k.astype(cache.k.dtype))
-        vbuf = cache.v.at[b, ring].set(v.astype(cache.v.dtype))
+        kw = k.astype(cache.k.dtype)
+        vw = v.astype(cache.v.dtype)
+        if act is not None:
+            # Drained slots re-write their current ring row (a no-op):
+            # one gather + scatter instead of a full-buffer select.
+            kw = jnp.where(act[:, None, None], kw, cache.k[b, ring])
+            vw = jnp.where(act[:, None, None], vw, cache.v[b, ring])
+        kbuf = cache.k.at[b, ring].set(kw)
+        vbuf = cache.v.at[b, ring].set(vw)
         valid = (jnp.arange(size)[None, :]
                  < jnp.minimum(n_seen, size)[:, None])    # (B, S)
         valid = valid[:, None, None, :]                   # vs (B,Hkv,G,S)
@@ -258,6 +307,8 @@ def decode_step(spec: AttentionSpec, params: dict | None, q, k, v,
         num = jnp.einsum("...kgs,...skd->...kgd", scores, vb)
         den = jnp.sum(scores, axis=-1)[..., None] + 1e-6
         y = (num / den).reshape(*q.shape[:-1], dv)
+        if act is not None:
+            y = jnp.where(act[:, None, None], y, 0).astype(y.dtype)
         return y, AttnCache(kbuf, vbuf, n_seen, None, None)
 
     logits = jnp.einsum("...kgd,...skd->...kgs", qg, kb) / jnp.sqrt(
@@ -267,8 +318,10 @@ def decode_step(spec: AttentionSpec, params: dict | None, q, k, v,
     logits = jnp.where(valid, logits, jnp.finfo(logits.dtype).min)
     probs = jax.nn.softmax(logits.astype(jnp.float32), -1).astype(q.dtype)
     y = jnp.einsum("...kgs,...skd->...kgd", probs, vb)
-    return y.reshape(*q.shape[:-1], dv), AttnCache(kbuf, vbuf, n_seen,
-                                                   None, None)
+    y = y.reshape(*q.shape[:-1], dv)
+    if act is not None:
+        y = jnp.where(act[:, None, None], y, 0).astype(y.dtype)
+    return y, AttnCache(kbuf, vbuf, n_seen, None, None)
 
 
 def _features(spec: AttentionSpec, params: dict | None, u):

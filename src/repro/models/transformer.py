@@ -300,11 +300,36 @@ def init_cache(cfg: ArchConfig, batch: int, max_len: int) -> DecodeCache:
     return DecodeCache(a_cache, s_cache, jnp.zeros((batch,), jnp.int32))
 
 
+def _state_passthrough(new, old, act):
+    """jnp.where-select ``new`` vs ``old`` state leaves on the (B,) active
+    mask — the reference-path analogue of the Pallas kernel's masked
+    state RMW (drained slots keep their bytes bit-identical)."""
+    if act is None:
+        return new
+
+    def sel(n, o):
+        a = act.reshape(act.shape + (1,) * (n.ndim - 1))
+        return jnp.where(a, n, o)
+
+    return jax.tree.map(sel, new, old)
+
+
 def decode_step(params: dict, cfg: ArchConfig, cache: DecodeCache,
-                tokens: jnp.ndarray) -> tuple[jnp.ndarray, DecodeCache]:
-    """One autoregressive step. tokens (B, 1) -> logits (B, 1, V)."""
+                tokens: jnp.ndarray,
+                active: jnp.ndarray | None = None
+                ) -> tuple[jnp.ndarray, DecodeCache]:
+    """One autoregressive step. tokens (B, 1) -> logits (B, 1, V).
+
+    ``active`` (B,) bool/int is the continuous-batching slot mask: drained
+    slots pass their whole per-layer state through unchanged (attention
+    caches, SSM carries, per-slot ``pos``) and contribute zero attention/
+    SSM output — the jitted pool dispatch stays one fixed-shape call while
+    idle slots stop advancing. Their logits rows are meaningless and must
+    be masked by the caller (the engine samples only active rows).
+    """
     x = embed(params["embed"], tokens[:, 0]).astype(cfg.activation_dtype)
     pos = cache.pos
+    act = None if active is None else active.astype(bool)
     slay_params = params.get("slay")
     kinds = jnp.asarray(_layer_kinds(cfg))
 
@@ -318,7 +343,9 @@ def decode_step(params: dict, cfg: ArchConfig, cache: DecodeCache,
                 d_state=cfg.ssm_state, expand=cfg.ssm_expand,
                 head_dim=cfg.ssm_head_dim, ngroups=cfg.ssm_ngroups,
                 conv_width=cfg.ssm_conv_width)
-            new["ssm"] = st
+            new["ssm"] = _state_passthrough(st, scanned["ssm"], act)
+            if act is not None:
+                y = jnp.where(act[:, None], y, 0).astype(y.dtype)
             return x + y, new
         xa = rmsnorm(lp["pre_attn"], x)
         q = jnp.einsum("bd,dhk->bhk", xa, lp["attn"]["wq"])
@@ -336,16 +363,19 @@ def decode_step(params: dict, cfg: ArchConfig, cache: DecodeCache,
             spec_l = cfg.attention_spec(local=True)
 
             def _local():
-                y, c = attn.decode_step(spec_l, None, q, k, v, ac)
+                y, c = attn.decode_step(spec_l, None, q, k, v, ac,
+                                        active=act)
                 return y, _merge_cache(ac, c)
 
             def _global():
-                y, c = attn.decode_step(spec_g, slay_params, q, k, v, ac)
+                y, c = attn.decode_step(spec_g, slay_params, q, k, v, ac,
+                                        active=act)
                 return y, _merge_cache(ac, c)
 
             y, nac = jax.lax.cond(is_local == 1, _local, _global)
         else:
-            y, nac = attn.decode_step(spec_g, slay_params, q, k, v, ac)
+            y, nac = attn.decode_step(spec_g, slay_params, q, k, v, ac,
+                                      active=act)
         a = jnp.einsum("bhk,hkd->bd", y, lp["attn"]["wo"])
         new["attn"] = nac
         if cfg.family == "hybrid":
@@ -353,8 +383,10 @@ def decode_step(params: dict, cfg: ArchConfig, cache: DecodeCache,
                 lp["ssd"], xa, scanned["ssm"], d_state=cfg.ssm_state,
                 expand=cfg.ssm_expand, head_dim=cfg.ssm_head_dim,
                 ngroups=cfg.ssm_ngroups, conv_width=cfg.ssm_conv_width)
+            if act is not None:
+                m = jnp.where(act[:, None], m, 0).astype(m.dtype)
             a = 0.5 * (a + m)
-            new["ssm"] = st
+            new["ssm"] = _state_passthrough(st, scanned["ssm"], act)
         x = x + a
         xm = rmsnorm(lp["pre_mlp"], x)
         if cfg.moe_experts:
@@ -374,13 +406,29 @@ def decode_step(params: dict, cfg: ArchConfig, cache: DecodeCache,
     x = rmsnorm(params["final_norm"], x)
     table = params.get("unembed", params["embed"])
     logits = unembed(table, x, cfg.final_logit_softcap)
+    step = 1 if act is None else act.astype(jnp.int32)
     return logits[:, None, :], DecodeCache(
-        new.get("attn"), new.get("ssm"), pos + 1)
+        new.get("attn"), new.get("ssm"), pos + step)
+
+
+def supports_masked_prefill(cfg: ArchConfig) -> bool:
+    """Whether prefill accepts ``true_len`` (length-bucketed right-padding).
+
+    Exact for pure-attention decoders: causality keeps the valid prefix's
+    activations byte-identical under right padding, and the cache masks pad
+    contributions out (zero key features / zero KV rows outside the ``pos``
+    horizon). SSM/hybrid carries decay through pad steps (no exact masked
+    form) and windowed KV rings would evict in-window history, so those
+    fall back to per-length compilation.
+    """
+    return cfg.family not in ("ssm", "hybrid", "encdec") \
+        and not cfg.local_window
 
 
 def prefill(params: dict, cfg: ArchConfig, tokens: jnp.ndarray, *,
-            patch_embeds=None,
-            max_len: int | None = None) -> tuple[jnp.ndarray, DecodeCache]:
+            patch_embeds=None, max_len: int | None = None,
+            true_len: jnp.ndarray | None = None
+            ) -> tuple[jnp.ndarray, DecodeCache]:
     """Process a full prompt; return last-token logits + a primed cache.
 
     ``max_len`` sizes the KV ring buffer exactly when given (so a pooled
@@ -389,13 +437,25 @@ def prefill(params: dict, cfg: ArchConfig, tokens: jnp.ndarray, *,
     paths are length-independent either way. Implemented as forward for
     logits + per-layer cache construction in a second scan (keeps the hot
     forward path allocation-free).
+
+    ``true_len`` (B,) int32 (traced) marks the real sequence length of a
+    right-padded prompt — the length-bucketed serving fallback compiles
+    once per pow-2 bucket instead of once per distinct prompt length.
+    Logits are read at ``true_len - 1`` and the cache excludes every pad
+    position exactly (see :func:`supports_masked_prefill`).
     """
+    if true_len is not None and not supports_masked_prefill(cfg):
+        raise NotImplementedError(
+            f"true_len-masked prefill unsupported for {cfg.name} "
+            f"(family={cfg.family}, local_window={cfg.local_window})")
     B = tokens.shape[0]
     x = embed(params["embed"], tokens).astype(cfg.activation_dtype)
     if patch_embeds is not None:
         x = jnp.concatenate([patch_embeds.astype(x.dtype), x], axis=1)
     L = x.shape[1]
     positions = jnp.arange(L, dtype=jnp.int32)[None, :]
+    valid = None if true_len is None else \
+        positions < true_len[:, None]                     # (B, L)
     slay_params = params.get("slay")
     kinds = jnp.asarray(_layer_kinds(cfg))
     cache0 = init_cache(cfg, B, max_len if max_len else L + 64)
@@ -433,19 +493,19 @@ def prefill(params: dict, cfg: ArchConfig, tokens: jnp.ndarray, *,
 
             def _local():
                 y = attn.full_attention(spec_l, None, q, k, v)
-                c = attn.prefill_cache(spec_l, None, k, v, ac)
+                c = attn.prefill_cache(spec_l, None, k, v, ac, valid)
                 return y, _merge_cache(ac, c)
 
             def _global():
                 y = attn.full_attention(spec_g, slay_params, q, k, v)
-                c = attn.prefill_cache(spec_g, slay_params, k, v, ac)
+                c = attn.prefill_cache(spec_g, slay_params, k, v, ac, valid)
                 return y, _merge_cache(ac, c)
 
             y, nac = jax.lax.cond(is_local == 1, _local, _global)
         else:
             y = attn.full_attention(spec_g, slay_params, q, k, v)
             nac = _merge_cache(ac, attn.prefill_cache(spec_g, slay_params,
-                                                      k, v, ac))
+                                                      k, v, ac, valid))
         y = constrain(y, _ahead)
         a = constrain(jnp.einsum("blhk,hkd->bld", y, lp["attn"]["wo"]),
                       ("act_batch", "act_seq", "act_embed"))
@@ -472,11 +532,20 @@ def prefill(params: dict, cfg: ArchConfig, tokens: jnp.ndarray, *,
     if cache0.ssm is not None:
         scanned["ssm"] = cache0.ssm
     (x, _), new = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), scanned)
-    x = rmsnorm(params["final_norm"], x[:, -1])
+    if true_len is None:
+        x_last = x[:, -1]
+        pos = jnp.full((B,), L, jnp.int32)
+    else:
+        # Last *real* token of each right-padded row (causality guarantees
+        # its activations are identical to the unpadded prompt's).
+        idx = jnp.maximum(true_len - 1, 0)[:, None, None]
+        x_last = jnp.take_along_axis(x, idx, axis=1)[:, 0]
+        pos = true_len.astype(jnp.int32)
+    x = rmsnorm(params["final_norm"], x_last)
     table = params.get("unembed", params["embed"])
     logits = unembed(table, x, cfg.final_logit_softcap)
     return logits[:, None, :], DecodeCache(
-        new.get("attn"), new.get("ssm"), jnp.full((B,), L, jnp.int32))
+        new.get("attn"), new.get("ssm"), pos)
 
 
 def reset_slot(cfg: ArchConfig, cache: DecodeCache,

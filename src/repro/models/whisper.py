@@ -210,14 +210,24 @@ def supports_chunked_prefill(cfg: ArchConfig) -> bool:
     return False
 
 
+def supports_masked_prefill(cfg: ArchConfig) -> bool:
+    """No ``true_len`` masking for encdec (the audio encoding dominates the
+    prefill compile anyway; prompt-length bucketing buys nothing)."""
+    return False
+
+
 def prefill_chunk(params: dict, cfg: ArchConfig, cache: WhisperCache,
                   tokens: jnp.ndarray):
     raise NotImplementedError("chunked prefill unsupported for encdec")
 
 
 def prefill(params: dict, cfg: ArchConfig, tokens: jnp.ndarray,
-            frame_embeds: jnp.ndarray, *, max_len: int | None = None):
+            frame_embeds: jnp.ndarray, *, max_len: int | None = None,
+            true_len=None):
     """Encode audio + absorb the prompt; returns (logits, WhisperCache)."""
+    if true_len is not None:
+        raise NotImplementedError("true_len-masked prefill unsupported "
+                                  "for encdec")
     enc = encode(params, cfg, frame_embeds)
     B, L = tokens.shape
     x = embed(params["embed"], tokens).astype(cfg.activation_dtype)
@@ -267,12 +277,18 @@ def prefill(params: dict, cfg: ArchConfig, tokens: jnp.ndarray,
 
 
 def decode_step(params: dict, cfg: ArchConfig, cache: WhisperCache,
-                tokens: jnp.ndarray):
-    """One decoder token with cached encoder cross-state."""
+                tokens: jnp.ndarray, active=None):
+    """One decoder token with cached encoder cross-state.
+
+    ``active`` (B,) masks continuous-batching pool slots: drained rows keep
+    their self-attention cache and ``pos`` bit-identical (the cross state
+    is static — read-only — so it needs no masking).
+    """
     x = embed(params["embed"], tokens[:, 0]).astype(cfg.activation_dtype)
     spec = cfg.attention_spec()
     slay_params = params.get("slay")
     pos = cache.pos
+    act = None if active is None else active.astype(bool)
 
     def body(x, scanned):
         lp = scanned["params"]
@@ -284,7 +300,7 @@ def decode_step(params: dict, cfg: ArchConfig, cache: WhisperCache,
         q = rope(q[:, None], p1, cfg.rope_theta)[:, 0]
         k = rope(k[:, None], p1, cfg.rope_theta)[:, 0]
         y, nac = attn.decode_step(spec, slay_params, q, k, v,
-                                  scanned["attn"])
+                                  scanned["attn"], active=act)
         x = x + jnp.einsum("bhk,hkd->bd", y, lp["attn"]["wo"])
         xc = rmsnorm(lp["pre_cross"], x)
         qc = jnp.einsum("bd,dhk->bhk", xc, lp["cross"]["wq"])
@@ -317,5 +333,6 @@ def decode_step(params: dict, cfg: ArchConfig, cache: WhisperCache,
                                    "cs": cache.cross_s, "cz": cache.cross_z})
     x = rmsnorm(params["final_norm"], x)
     logits = unembed(params["embed"], x)
+    step = 1 if act is None else act.astype(jnp.int32)
     return logits[:, None], WhisperCache(ys["attn"], cache.cross_s,
-                                         cache.cross_z, pos + 1)
+                                         cache.cross_z, pos + step)

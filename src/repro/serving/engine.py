@@ -27,6 +27,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import functools
 import time
 from typing import Callable
 
@@ -37,6 +38,7 @@ import numpy as np
 from repro.configs.base import ArchConfig, ServingConfig
 from repro.distributed import sharding as shd
 from repro.models import api
+from repro.serving import sampling
 
 
 def jit_serve_fns(cfg: ArchConfig, mesh, max_len: int,
@@ -167,6 +169,50 @@ class ServingEngine:
 # ---------------------------------------------------------------------------
 
 
+def _macro_decode(params, cache, last_tok, active, rids, gen, eos_ids,
+                  max_new, *, cfg: ArchConfig, num_ticks: int,
+                  temperature: float, seed: int):
+    """K decode ticks as one jitted ``lax.scan`` over the slot pool.
+
+    The serving decode hot loop, fully device-resident: per tick the pool
+    runs one masked ``api.decode_step`` (drained slots are an exact state
+    passthrough), sampling happens on device keyed per (seed, rid,
+    token-index), and a slot that hits EOS or its ``max_new`` budget
+    mid-macro-step is masked for the remaining ticks. The host receives
+    only the (K, S) int32 token buffer plus (K, S) emitted flags — one
+    sync per K ticks instead of an (S, vocab) logits pull per token.
+
+    last_tok/active/rids/gen/eos_ids/max_new are (S,) vectors; ``gen``
+    counts tokens already emitted per slot (the prefill-sampled first
+    token included), which is exactly the sampling ``idx`` of the *next*
+    token — so the stream is byte-identical for every K.
+    """
+    def tick(carry, _):
+        cache, last_tok, active, gen = carry
+        logits, cache = api.decode_step(params, cfg, cache,
+                                        last_tok[:, None], active)
+        tok = sampling.sample_tokens(logits[:, -1, :], rids, gen,
+                                     temperature=temperature, seed=seed)
+        emitted = active
+        tok = jnp.where(emitted, tok, last_tok)
+        gen = gen + emitted.astype(jnp.int32)
+        hit = emitted & ((tok == eos_ids) | (gen >= max_new))
+        active = active & jnp.logical_not(hit)
+        return (cache, tok, active, gen), (tok, emitted)
+
+    (cache, _, _, _), (toks, em) = jax.lax.scan(
+        tick, (cache, last_tok, active, gen), None, length=num_ticks)
+    return cache, toks, em
+
+
+def _bucket_len(n: int, lo: int, cap: int) -> int:
+    """Smallest pow-2 >= max(n, lo), capped at ``cap`` (>= n always)."""
+    b = lo
+    while b < n:
+        b *= 2
+    return min(b, cap) if cap >= n else n
+
+
 @dataclasses.dataclass
 class RequestStats:
     rid: int
@@ -197,6 +243,7 @@ class EngineMetrics:
     """Counters the engine updates every tick; ``summary()`` aggregates."""
 
     num_slots: int = 0
+    macro_ticks: int = 1
     ticks: int = 0
     decode_ticks: int = 0
     prefill_ticks: int = 0
@@ -206,6 +253,17 @@ class EngineMetrics:
     queue_depth_sum: int = 0
     queue_depth_max: int = 0
     occupancy_sum: int = 0
+    # Hot-loop sync cadence. decode_dispatches counts jitted macro-step
+    # calls (one per K decode ticks, whole pool — never per slot);
+    # host_syncs counts blocking device->host pulls in the decode loop
+    # (the (K, S) token buffer, one per dispatch). Prefill first-token
+    # pulls are tracked separately (prefill_token_syncs): they are one
+    # int32 scalar per admitted request, off the per-token hot loop.
+    decode_dispatches: int = 0
+    host_syncs: int = 0
+    prefill_token_syncs: int = 0
+    bucket_hits: int = 0              # bucketed fallback prefill reuse
+    bucket_misses: int = 0            # first compile of a bucket length
     wall_start: float = dataclasses.field(default_factory=time.perf_counter)
     per_request: dict = dataclasses.field(default_factory=dict)
 
@@ -232,6 +290,18 @@ class EngineMetrics:
             "requests_completed": self.requests_completed,
             "tokens_generated": self.tokens_generated,
             "prompt_tokens": self.prompt_tokens,
+            "macro_ticks": self.macro_ticks,
+            "decode_dispatches": self.decode_dispatches,
+            "host_syncs": self.host_syncs,
+            "prefill_token_syncs": self.prefill_token_syncs,
+            "host_syncs_per_token":
+                self.host_syncs / max(self.tokens_generated, 1),
+            "tokens_per_dispatch":
+                self.tokens_generated / max(self.decode_dispatches, 1),
+            "dispatches_per_decode_tick":
+                self.decode_dispatches / max(self.decode_ticks, 1),
+            "bucket_hits": self.bucket_hits,
+            "bucket_misses": self.bucket_misses,
             "wall_s": wall,
             "decode_tokens_per_s": self.tokens_generated / wall,
             "total_tokens_per_s":
@@ -349,15 +419,21 @@ class ContinuousServingEngine:
         outs, metrics = eng.run()          # rid -> np.ndarray of tokens
 
     or drive it tick-by-tick with :meth:`step` for external event loops.
-    Time is a logical tick counter (one device dispatch per tick); request
-    ``arrival_time`` is in ticks, letting benchmarks replay arrival traces
-    deterministically on any backend.
+    Time is a logical tick counter; request ``arrival_time`` is in ticks,
+    letting benchmarks replay arrival traces deterministically on any
+    backend. With ``macro_ticks`` K > 1 a decode dispatch covers K ticks:
+    the host replays the returned (K, S) token buffer tick-by-tick so
+    streaming callbacks, TTFT-in-ticks, queue-depth samples, and eviction
+    all happen at exact per-tick granularity — only admission waits for a
+    macro-step boundary (the K tradeoff; token streams are K-invariant).
 
-    Compile-cache note: the chunked prefill path compiles once per distinct
-    chunk length (at most the full-chunk shape plus the ragged final-chunk
-    remainders, bounded by ``prefill_chunk``); the non-chunkable fallback
-    (yat kinds, SSM/hybrid, frontends) compiles per distinct prompt length.
-    Length-bucketed padding for those paths is a tracked ROADMAP item.
+    Compile-cache note: the decode hot loop is exactly one jitted
+    macro-step entry. The chunked prefill path compiles once per distinct
+    chunk length (bounded by ``prefill_chunk``); the non-chunkable
+    fallback (exact yat kinds, frontends) compiles once per pow-2 length
+    *bucket* (right-padded, masked exactly via ``true_len``), except for
+    SSM/hybrid/encdec which have no masked form and stay per-length.
+    :meth:`jit_cache_entries` exposes the live counts (CI budgets them).
     """
 
     def __init__(self, cfg: ArchConfig, params, mesh, *,
@@ -367,12 +443,16 @@ class ContinuousServingEngine:
         self.serving = serving
         self.rules = rules
         self.sched = Scheduler(serving)
-        self.metrics = EngineMetrics(num_slots=serving.num_slots)
+        self.metrics = EngineMetrics(num_slots=serving.num_slots,
+                                     macro_ticks=serving.macro_ticks)
         self.tick = 0
         self._next_rid = 0
         self._outputs: dict[int, list] = {}
         self._prefill: _Prefill | None = None
         self._chunkable = api.supports_chunked_prefill(cfg)
+        self._bucketable = (serving.prefill_buckets
+                            and api.supports_masked_prefill(cfg))
+        self._seen_buckets: set[int] = set()
 
         S, L = serving.num_slots, serving.max_len
         axes = api.param_axes(cfg)
@@ -380,13 +460,33 @@ class ContinuousServingEngine:
         p_sh = shd.logical_to_sharding(mesh, rules, p_abs, axes)
         c_abs = api.abstract_cache(cfg, S, L)
         c_sh = shd.serving_cache_sharding(mesh, rules, c_abs)
-        b_sh = shd.batch_sharding(mesh, rules)
+        v_sh = shd.serving_vector_sharding(mesh)
         with mesh:
             self.pool = jax.device_put(api.init_cache(cfg, S, L), c_sh)
-        self._decode_fn = jax.jit(
-            lambda p, c, t: api.decode_step(p, cfg, c, t),
-            in_shardings=(p_sh, c_sh, b_sh),
-            out_shardings=(b_sh, c_sh), donate_argnums=(1,))
+        # Host mirrors of the per-slot decode vectors fed to the jitted
+        # macro-step. The replay loop applies the *same* emit/EOS/budget
+        # logic as the device scan, so mirrors and device state never
+        # diverge and nothing needs to be read back besides the token
+        # buffer itself.
+        self._last_tok = np.zeros(S, np.int32)
+        self._active = np.zeros(S, bool)
+        self._rids = np.zeros(S, np.int32)
+        self._gen = np.zeros(S, np.int32)
+        self._eos = np.full(S, -1, np.int32)
+        self._maxn = np.zeros(S, np.int32)
+        # The decode hot loop: one jitted K-tick macro-step for the whole
+        # pool (donated cache, fused sampling, masked drained slots).
+        self._macro_fn = jax.jit(
+            functools.partial(_macro_decode, cfg=cfg,
+                              num_ticks=serving.macro_ticks,
+                              temperature=serving.temperature,
+                              seed=serving.seed),
+            in_shardings=(p_sh, c_sh) + (v_sh,) * 6,
+            out_shardings=(c_sh, v_sh, v_sh), donate_argnums=(1,))
+        self._sample_fn = jax.jit(
+            functools.partial(sampling.sample_tokens,
+                              temperature=serving.temperature,
+                              seed=serving.seed))
         # Slot ops: slot index is a traced scalar -> one compile each, and
         # out-shardings pinned to the pool's (slot-stable, never reshards).
         self._write_fn = jax.jit(
@@ -402,6 +502,8 @@ class ContinuousServingEngine:
             donate_argnums=(1,))
         self._prefill_fn = jax.jit(
             lambda p, b: api.prefill(p, cfg, b, max_len=L))
+        self._prefill_masked_fn = jax.jit(
+            lambda p, b, n: api.prefill(p, cfg, b, max_len=L, true_len=n))
 
     # -- submission ---------------------------------------------------------
 
@@ -424,24 +526,26 @@ class ContinuousServingEngine:
     # -- engine ticks -------------------------------------------------------
 
     def step(self) -> bool:
-        """One engine tick: a prefill chunk or a decode step (whichever the
-        interleave policy picks). Returns False when fully idle."""
+        """One scheduling decision: a prefill chunk (one tick) or a decode
+        macro-step (K ticks, replayed per tick). Returns False when fully
+        idle."""
         sched = self.sched
         sched.poll_arrivals(self.tick)
-        self.metrics.sample(sched.queue_depth, sched.occupancy)
         did = False
         with self.mesh:
             if sched.want_prefill(self._prefill is not None):
+                self.metrics.sample(sched.queue_depth, sched.occupancy)
                 self._prefill_tick()
                 sched.note_prefill()
                 self.metrics.prefill_ticks += 1
+                self.tick += 1
                 did = True
             elif sched.active:
-                self._decode_tick()
-                sched.note_decode()
-                self.metrics.decode_ticks += 1
+                self._decode_macro()
                 did = True
-        self.tick += 1
+            else:
+                self.metrics.sample(sched.queue_depth, sched.occupancy)
+                self.tick += 1
         self.metrics.ticks = self.tick
         return did or bool(sched.waiting)
 
@@ -483,50 +587,112 @@ class ContinuousServingEngine:
             toks = jnp.asarray(chunk[None, :])
             logits, pf.cache = self._chunk_fn(self.params, pf.cache, toks)
             pf.offset += len(chunk)
+        elif self._bucketable:
+            # Non-chunkable fallback, bucketed: right-pad to the pow-2
+            # bucket and mask exactly via true_len — one compile per
+            # bucket instead of one per distinct prompt length. The cap
+            # leaves room for the vision patch prefix: prefix + bucket
+            # must fit the KV ring or the ring write would drop real
+            # prefix rows still inside the validity horizon.
+            prefix = (self.cfg.num_patches
+                      if self.cfg.frontend == "vision" else 0)
+            Lb = _bucket_len(len(prompt), self.serving.prefill_bucket_min,
+                             self.serving.max_len - prefix)
+            if Lb in self._seen_buckets:
+                self.metrics.bucket_hits += 1
+            else:
+                self._seen_buckets.add(Lb)
+                self.metrics.bucket_misses += 1
+            padded = np.zeros(Lb, np.int32)
+            padded[:len(prompt)] = prompt
+            batch = _model_batch(self.cfg, jnp.asarray(padded[None, :]))
+            tl = jnp.full((1,), prefix + len(prompt), jnp.int32)
+            logits, pf.cache = self._prefill_masked_fn(self.params, batch,
+                                                       tl)
+            pf.offset = len(prompt)
         else:
             batch = _model_batch(self.cfg, jnp.asarray(prompt[None, :]))
             logits, pf.cache = self._prefill_fn(self.params, batch)
             pf.offset = len(prompt)
         if pf.offset < len(prompt):
             return                       # more chunks; decode may interleave
-        # Prompt fully absorbed: first token, install into the pool slot.
-        tok0 = self._sample_token(
-            np.asarray(logits[0, -1], np.float32), pf.rid, 0)
+        # Prompt fully absorbed: sample the first token on device (same
+        # fused sampler as the decode loop, idx 0) and install the request
+        # into its pool slot. One int32 scalar crosses to host.
+        tok0 = int(self._sample_fn(
+            logits[:, -1, :], jnp.full((1,), pf.rid, jnp.int32),
+            jnp.zeros((1,), jnp.int32))[0])
+        self.metrics.prefill_token_syncs += 1
         self.pool = self._write_fn(self.pool, pf.cache, jnp.int32(pf.slot))
         self._prefill = None
         self.metrics.prompt_tokens += len(prompt)
         slot_rec = _Slot(pf.rid, req, tok0)
         self.sched.active[pf.slot] = slot_rec
+        self._last_tok[pf.slot] = tok0
+        self._active[pf.slot] = True
+        self._rids[pf.slot] = pf.rid
+        self._gen[pf.slot] = 1
+        self._eos[pf.slot] = req.eos_id
+        self._maxn[pf.slot] = req.max_new_tokens
         self._emit(slot_rec, tok0)
         if tok0 == req.eos_id or req.max_new_tokens <= 1:
             self._finish(pf.slot)
 
-    def _decode_tick(self):
-        S = self.serving.num_slots
-        tok = np.zeros((S, 1), np.int32)
-        for slot, rec in self.sched.active.items():
-            tok[slot, 0] = rec.last_tok
-        logits, self.pool = self._decode_fn(self.params, self.pool,
-                                            jnp.asarray(tok))
-        rows = np.asarray(logits[:, -1], np.float32)
-        for slot in list(self.sched.active):
-            rec = self.sched.active[slot]
-            t = self._sample_token(rows[slot], rec.rid, len(rec.tokens))
-            rec.last_tok = t
-            self._emit(rec, t)
-            if (t == rec.req.eos_id
-                    or len(rec.tokens) >= rec.req.max_new_tokens):
-                self._finish(slot)
+    def _decode_macro(self):
+        """One decode dispatch = K device ticks for the whole pool; replay
+        the token buffer on host at per-tick granularity so streaming
+        callbacks, TTFT/queue-depth samples, and eviction stay exact."""
+        self.pool, toks, em = self._macro_fn(
+            self.params, self.pool, jnp.asarray(self._last_tok),
+            jnp.asarray(self._active), jnp.asarray(self._rids),
+            jnp.asarray(self._gen), jnp.asarray(self._eos),
+            jnp.asarray(self._maxn))
+        self.metrics.decode_dispatches += 1
+        toks, em = np.asarray(toks), np.asarray(em)  # ONE host sync per K
+        self.metrics.host_syncs += 1
+        for t in range(toks.shape[0]):
+            if not em[t].any():
+                break   # every slot drained mid-macro-step; suffix unused
+            self.sched.poll_arrivals(self.tick)
+            self.metrics.sample(self.sched.queue_depth,
+                                self.sched.occupancy)
+            for slot in list(self.sched.active):
+                if not em[t, slot]:
+                    continue
+                rec = self.sched.active[slot]
+                tk = int(toks[t, slot])
+                rec.last_tok = tk
+                self._last_tok[slot] = tk
+                self._gen[slot] += 1
+                self._emit(rec, tk)
+                if (tk == rec.req.eos_id
+                        or len(rec.tokens) >= rec.req.max_new_tokens):
+                    self._finish(slot)
+            self.sched.note_decode()
+            self.metrics.decode_ticks += 1
+            self.tick += 1
+            self.metrics.ticks = self.tick
 
-    def _sample_token(self, row: np.ndarray, rid: int, idx: int) -> int:
-        """Greedy, or per-request deterministic Gumbel sampling keyed on
-        (engine seed, rid, token index) — independent of slot placement and
-        batch composition, so replays are reproducible."""
-        T = self.serving.temperature
-        if T <= 0.0:
-            return int(np.argmax(row))
-        rng = np.random.default_rng((self.serving.seed, rid, idx))
-        return int(np.argmax(row / T + rng.gumbel(size=row.shape)))
+    def jit_cache_entries(self) -> dict:
+        """Live jit-cache entry counts per engine entry point — the
+        recompile budget CI asserts on (the decode hot loop must stay at
+        exactly one entry; prefill entries are bounded by the chunk/bucket
+        counts, never by the number of distinct prompt lengths).
+
+        Counting relies on jax's ``_cache_size`` introspection; entry
+        points it cannot measure are omitted (callers treat a missing key
+        as "unmeasurable", not as a budget violation)."""
+        fns = {"macro_decode": self._macro_fn, "sample": self._sample_fn,
+               "write": self._write_fn, "reset": self._reset_fn,
+               "chunk": self._chunk_fn, "prefill": self._prefill_fn,
+               "prefill_masked": self._prefill_masked_fn}
+        out = {}
+        for name, fn in fns.items():
+            try:
+                out[name] = int(fn._cache_size())
+            except Exception:         # pragma: no cover — jax internals
+                continue
+        return out
 
     def _emit(self, rec: _Slot, tok: int):
         rec.tokens.append(tok)
@@ -544,6 +710,7 @@ class ContinuousServingEngine:
         st = self.metrics.per_request[rec.rid]
         st.finished = self.tick
         self.metrics.requests_completed += 1
+        self._active[slot] = False
         # Eviction = one slot overwrite (constant-state asymmetry: O(m·dv)
         # zeros for SLAY vs an O(max_len) ring zero for KV backends).
         self.pool = self._reset_fn(self.pool, jnp.int32(slot))

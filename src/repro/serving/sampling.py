@@ -1,0 +1,60 @@
+"""On-device token sampling for the serving decode hot loop.
+
+The continuous-batching engine samples *inside* the jitted decode tick so
+only an ``(num_slots,)`` int32 token vector — never an
+``(num_slots, vocab)`` logits matrix — crosses to host.
+
+Determinism contract: the Gumbel noise for request ``rid``'s ``idx``-th
+generated token is keyed on ``(seed, rid, idx)`` via threefry ``fold_in``
+— independent of slot placement, batch composition, and macro-step size K.
+A request therefore samples the same token stream whether it decodes alone,
+in a full pool, tick-by-tick (K=1), or K ticks per dispatch, and
+:func:`host_sample_token` reproduces the fused sampler exactly on the same
+backend (the parity oracle for tests).
+
+Greedy (``temperature <= 0``) is a plain fp32 argmax: ``jnp.argmax`` and
+``np.argmax`` both take the first maximum, so device and host agree
+bit-for-bit on identical logits.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _gumbel_row(seed: int, rid, idx, vocab: int) -> jnp.ndarray:
+    """Gumbel(0,1) row keyed on (seed, rid, idx); fp32, (vocab,)."""
+    key = jax.random.fold_in(
+        jax.random.fold_in(jax.random.PRNGKey(seed), rid), idx)
+    return jax.random.gumbel(key, (vocab,), jnp.float32)
+
+
+def sample_tokens(logits: jnp.ndarray, rids: jnp.ndarray,
+                  idxs: jnp.ndarray, *, temperature: float,
+                  seed: int) -> jnp.ndarray:
+    """Fused per-slot sampling: logits (S, V) -> tokens (S,) int32.
+
+    ``rids``/``idxs`` are (S,) int32 — the request id and token index each
+    slot is sampling (values for drained slots are ignored by the caller).
+    ``temperature``/``seed`` are static (baked into the jitted tick).
+    Greedy argmax when ``temperature <= 0``; Gumbel-max otherwise.
+    """
+    logits = logits.astype(jnp.float32)
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    vocab = logits.shape[-1]
+    g = jax.vmap(lambda r, i: _gumbel_row(seed, r, i, vocab))(rids, idxs)
+    return jnp.argmax(logits / temperature + g, axis=-1).astype(jnp.int32)
+
+
+def host_sample_token(row: np.ndarray, rid: int, idx: int, *,
+                      temperature: float, seed: int) -> int:
+    """Host-side reference sampler — same math as :func:`sample_tokens`
+    on one logits row; the parity oracle for the fused on-device path."""
+    row = np.asarray(row, np.float32)
+    if temperature <= 0.0:
+        return int(np.argmax(row))
+    g = np.asarray(_gumbel_row(seed, jnp.int32(rid), jnp.int32(idx),
+                               row.shape[-1]))
+    return int(np.argmax(row / temperature + g))
