@@ -19,15 +19,24 @@ serving perf trajectory CI tracks per PR:
 
 Both cache regimes run: the constant-state SLAY path (slot overwrite
 eviction) and the KV-ring softmax baseline (same scheduler, O(max_len)
-slot state), so the JSON shows the serving asymmetry directly.
+slot state), so the JSON shows the serving asymmetry directly. A third
+``constant_state_sharded`` row replays the last constant_state trace on a
+mesh=(data=N,) slot-sharded pool in a forced-multi-device subprocess
+(``benchmarks/serving_sharded_row.py``); every row carries a
+``stream_digest`` (sha256 of the rid-ordered token streams) and the CI
+contract step asserts the sharded digest equals the single-shard one —
+the DESIGN.md §8 byte-identical-stream contract.
 
     PYTHONPATH=src python -m benchmarks.run --suite serving
     PYTHONPATH=src python -m benchmarks.run --suite serving --smoke
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
+import subprocess
+import sys
 
 import jax
 import numpy as np
@@ -68,6 +77,52 @@ def _poisson_trace(rng, n: int, rate: float, prompt_range, vocab: int,
         reqs.append(Request(prompt, max_new_tokens=max_new,
                             arrival_time=t))
     return reqs
+
+
+def _stream_digest(outs: dict) -> str:
+    """sha256 over the rid-ordered token streams — the byte-identity
+    fingerprint the §8 sharded/unsharded contract compares."""
+    h = hashlib.sha256()
+    for rid in sorted(outs):
+        h.update(np.int64(rid).tobytes())
+        h.update(np.asarray(outs[rid], np.int32).tobytes())
+    return h.hexdigest()
+
+
+def _sharded_row(p: dict, load: float) -> dict:
+    """Run the constant_state trace on a slot-sharded mesh=(data=N,) pool.
+
+    jax pins its device count at first init, so the parent process cannot
+    force a multi-device CPU itself — the row runs in a subprocess with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` and comes back
+    as JSON on stdout.
+    """
+    data = 4 if p["num_slots"] % 4 == 0 else 2
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    # Append (not overwrite): the child must see the parent's XLA flags
+    # plus the forced device count, or numerics-affecting flags would
+    # make the byte-identity digest comparison spuriously fail.
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        f" --xla_force_host_platform_device_count={data}"
+                        ).strip()
+    env["PYTHONPATH"] = os.path.join(repo, "src") + os.pathsep \
+        + env.get("PYTHONPATH", "")
+    lo, hi = p["prompt"]
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.serving_sharded_row",
+         "--load", str(load), "--n", str(p["n"]),
+         "--max-new", str(p["max_new"]),
+         "--prompt-lo", str(lo), "--prompt-hi", str(hi),
+         "--num-slots", str(p["num_slots"]),
+         "--max-len", str(p["max_len"]),
+         "--prefill-chunk", str(p["prefill_chunk"]),
+         "--macro-ticks", str(_MACRO_TICKS), "--data", str(data)],
+        capture_output=True, text=True, timeout=1800, env=env, cwd=repo)
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"sharded serving row failed:\n{proc.stdout}\n{proc.stderr}")
+    return json.loads(proc.stdout.splitlines()[-1])
 
 
 def run(quick: bool = True, smoke: bool = False):
@@ -114,7 +169,24 @@ def run(quick: bool = True, smoke: bool = False):
             rows.append({"regime": regime, "load": load,
                          "num_slots": p["num_slots"],
                          "requests": p["n"],
+                         "stream_digest": _stream_digest(outs),
                          "jit_cache_entries": jit_entries, **summary})
+
+    # Sharded-pool variant (DESIGN.md §8): same trace as the last
+    # constant_state load, slot pool sharded over mesh=(data=N,). The
+    # digest must match the single-shard row byte-for-byte — asserted
+    # here and re-asserted from the JSON by the CI contract step.
+    load = p["loads"][-1]
+    sharded = _sharded_row(p, load)
+    base = next(r for r in rows
+                if r["regime"] == "constant_state" and r["load"] == load)
+    assert sharded["stream_digest"] == base["stream_digest"], \
+        (sharded["stream_digest"], base["stream_digest"])
+    rows.append(sharded)
+    results.append(BenchResult(
+        f"serving/constant_state_sharded/load{load:g}/slot_shards",
+        float(sharded["slot_shards"]), "shards",
+        extra={"regime": "constant_state_sharded", "load": load}))
 
     payload = {
         "meta": {

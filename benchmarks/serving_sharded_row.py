@@ -1,0 +1,72 @@
+"""One sharded-pool serving-bench row, in its own forced-multi-device
+process.
+
+``benchmarks/serving_bench.py`` spawns this module with
+``XLA_FLAGS=--xla_force_host_platform_device_count=<data>`` (jax pins the
+device count at first init, so the parent bench process — a plain CPU or
+TPU runtime — cannot build a data>1 mesh itself). It replays the *same*
+seeded Poisson trace as the parent's constant_state row on a
+mesh=(data=N,) slot-sharded pool and prints the result row as JSON on
+stdout; the parent merges it into ``BENCH_serving.json`` and the CI
+contract step asserts its ``stream_digest`` equals the single-shard
+row's — the DESIGN.md §8 byte-identical-stream contract, enforced on
+every PR.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--load", type=float, required=True)
+    ap.add_argument("--n", type=int, required=True)
+    ap.add_argument("--max-new", type=int, required=True)
+    ap.add_argument("--prompt-lo", type=int, required=True)
+    ap.add_argument("--prompt-hi", type=int, required=True)
+    ap.add_argument("--num-slots", type=int, required=True)
+    ap.add_argument("--max-len", type=int, required=True)
+    ap.add_argument("--prefill-chunk", type=int, required=True)
+    ap.add_argument("--macro-ticks", type=int, required=True)
+    ap.add_argument("--data", type=int, required=True)
+    args = ap.parse_args()
+
+    import jax
+    import numpy as np
+
+    from benchmarks.serving_bench import _poisson_trace, _stream_digest
+    from repro import configs
+    from repro.configs.base import ServingConfig
+    from repro.launch.mesh import make_serving_mesh
+    from repro.models import api
+    from repro.serving.engine import ContinuousServingEngine
+
+    cfg = configs.get_smoke_config("slayformer-124m", attn_kind="slay")
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(1234)
+    reqs = _poisson_trace(rng, args.n, args.load,
+                          (args.prompt_lo, args.prompt_hi),
+                          cfg.vocab_size, args.max_new)
+    eng = ContinuousServingEngine(
+        cfg, params, make_serving_mesh(args.data),
+        serving=ServingConfig(num_slots=args.num_slots,
+                              max_len=args.max_len,
+                              prefill_chunk=args.prefill_chunk,
+                              macro_ticks=args.macro_ticks,
+                              slot_shards=args.data))
+    outs, summary = eng.run(reqs)
+    assert summary["requests_completed"] == args.n
+    assert summary["slot_shards"] == args.data, summary["slot_shards"]
+    row = {"regime": "constant_state_sharded", "load": args.load,
+           "num_slots": args.num_slots, "requests": args.n,
+           "mesh_devices": jax.device_count(),
+           "stream_digest": _stream_digest(outs),
+           "jit_cache_entries": eng.jit_cache_entries(), **summary}
+    json.dump(row, sys.stdout)
+    sys.stdout.write("\n")
+
+
+if __name__ == "__main__":
+    main()

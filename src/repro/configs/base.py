@@ -169,6 +169,15 @@ class ServingConfig:
     kinds, frontends) to pow-2 length buckets (>= ``prefill_bucket_min``,
     capped at ``max_len``) so they compile once per bucket instead of once
     per distinct prompt length; masked out exactly via ``true_len``.
+
+    ``slot_shards`` partitions the slot pool over the mesh ``data`` axis
+    (DESIGN.md §8): 0 = auto (shard over the whole data axis when
+    ``num_slots`` is divisible by it, else replicate — recorded like the
+    rule-engine divisibility fallback), 1 = force a single shard
+    (replicated pool), N > 1 = demand exactly N-way sharding (the engine
+    raises on a mesh whose data axis is not N). Token streams are
+    byte-identical across any value — sampling is keyed on
+    (seed, rid, token-index), never on slot or shard placement.
     """
 
     num_slots: int = 4
@@ -181,6 +190,7 @@ class ServingConfig:
     macro_ticks: int = 8              # K decode ticks per device dispatch
     prefill_buckets: bool = True      # pow-2 bucketing of fallback prefill
     prefill_bucket_min: int = 16      # smallest bucket
+    slot_shards: int = 0              # data-axis pool shards (0 = auto)
 
     def __post_init__(self):
         if self.num_slots < 1:
@@ -191,6 +201,12 @@ class ServingConfig:
             raise ValueError("macro_ticks must be >= 1")
         if self.prefill_bucket_min < 1:
             raise ValueError("prefill_bucket_min must be >= 1")
+        if self.slot_shards < 0:
+            raise ValueError("slot_shards must be >= 0 (0 = auto)")
+        if self.slot_shards > 1 and self.num_slots % self.slot_shards:
+            raise ValueError(
+                f"num_slots ({self.num_slots}) must be divisible by "
+                f"slot_shards ({self.slot_shards})")
 
 
 @dataclasses.dataclass(frozen=True)

@@ -12,6 +12,7 @@ Model code annotates parameters with *logical* axis names (see
     experts  -> model            EP over MoE experts
     layers   -> None             scan axis, never sharded
     seq      -> model            SP for long-context activations
+    slots    -> data             serving slot-pool dim (DESIGN.md §8)
 
 The fallback rule: if a tensor dim is not divisible by the mesh-axis size
 (e.g. granite's single KV head over 16-way model parallelism), the rule
@@ -58,6 +59,9 @@ class ShardingRules:
     experts: tuple[str, ...] | str | None = "model"
     seq: tuple[str, ...] | str | None = None
     layers: tuple[str, ...] | str | None = None
+    # Serving slot pool: the slot dim of the pooled decode cache and of the
+    # engine's per-slot control vectors shards over `data` (DESIGN.md §8).
+    slots: tuple[str, ...] | str | None = "data"
     act_batch: tuple[str, ...] | str | None = ("pod", "data")
     act_embed: tuple[str, ...] | str | None = None
     act_heads: tuple[str, ...] | str | None = "model"
@@ -187,8 +191,87 @@ def batch_sharding(mesh: Mesh, rules: ShardingRules = DEFAULT_RULES,
     return NamedSharding(mesh, P(ax))
 
 
-def serving_cache_sharding(mesh: Mesh, rules: ShardingRules, abstract):
-    """Slot-stable decode-cache shardings for the continuous-batching pool.
+def serving_param_rules(rules: ShardingRules = DEFAULT_RULES
+                        ) -> ShardingRules:
+    """Serving-time parameter rules: replicate over the slot axes.
+
+    Training shards params over ``data`` (FSDP, ``embed -> data``); at
+    decode the ``data`` axis carries slot parallelism instead, and an
+    FSDP-sharded param tree would force a weight all-gather inside every
+    decode tick. Serving therefore replicates params over the slot axes
+    (keeping TP axes intact) — the enabler for the §8 zero-collective
+    decode hot loop contract.
+    """
+    slot_axes = rules.slots if isinstance(rules.slots, tuple) else \
+        (rules.slots,) if rules.slots else ()
+
+    def strip(entry):
+        if entry is None:
+            return None
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        kept = tuple(a for a in axes if a not in slot_axes)
+        return kept if len(kept) > 1 else (kept[0] if kept else None)
+
+    # Strip the slot axes from *every* rule (custom rule sets may map any
+    # logical axis to `data`), except `slots` itself — that one IS the
+    # slot-pool sharding the engine resolves separately.
+    return dataclasses.replace(rules, **{
+        f.name: strip(getattr(rules, f.name))
+        for f in dataclasses.fields(rules) if f.name != "slots"})
+
+
+def pool_slot_axes(mesh: Mesh, rules: ShardingRules, num_slots: int,
+                   requested: int = 0,
+                   fallback_log: list | None = None
+                   ) -> tuple[tuple[str, ...], int]:
+    """Resolve the mesh axes the serving slot pool shards over.
+
+    ``requested`` is ``ServingConfig.slot_shards``: 0 = auto (the whole
+    slot mesh axis, normally ``data``), 1 = force a single shard
+    (replicate), N > 1 = demand exactly N-way sharding (raises if the mesh
+    slot axes don't multiply to N — a config/mesh mismatch, not a
+    fallback). Slot->shard ownership is static: GSPMD splits the slot dim
+    into contiguous blocks, so shard k owns slots
+    [k*S/N, (k+1)*S/N) for the engine's lifetime.
+
+    Divisibility fallback: when ``num_slots`` is not divisible by the
+    slot-axis size the axis is dropped (pool replicates) and the drop is
+    recorded in ``fallback_log`` as ``("slots", num_slots, axis)`` — the
+    same contract as :func:`partition_spec`'s rule engine.
+
+    Returns ``(axes, shard_count)``; ``axes`` is ``()`` when replicated.
+    """
+    axes = _mesh_axes_present(mesh, rules.slots)
+    size = int(np.prod([mesh.shape[a] for a in axes], dtype=np.int64)) \
+        if axes else 1
+    if requested > 1 and requested != size:
+        raise ValueError(
+            f"slot_shards={requested} but mesh slot axes {axes} have size "
+            f"{size}; build the mesh to match (e.g. make_serving_mesh)")
+    if requested == 1 or not axes or size == 1:
+        return (), 1
+    while axes and num_slots % size:
+        dropped = axes[-1]
+        axes = axes[:-1]
+        size = int(np.prod([mesh.shape[a] for a in axes], dtype=np.int64)) \
+            if axes else 1
+        if fallback_log is not None:
+            fallback_log.append(("slots", num_slots, dropped))
+    return axes, size
+
+
+def _axis_entry(axes: tuple[str, ...]):
+    """Collapse an axis tuple to a PartitionSpec entry."""
+    if not axes:
+        return None
+    return axes[0] if len(axes) == 1 else tuple(axes)
+
+
+def serving_cache_sharding(mesh: Mesh, rules: ShardingRules, abstract, *,
+                           num_slots: int | None = None,
+                           slot_shards: int = 0,
+                           fallback_log: list | None = None):
+    """Slot-stable, slot-sharded decode-cache shardings for the pool.
 
     Derived from leaf *shapes* only (never from which slots are live), with
     the pool's slot dim fixed for the engine's lifetime — so admission and
@@ -197,24 +280,80 @@ def serving_cache_sharding(mesh: Mesh, rules: ShardingRules, abstract):
     a host round-trip. The engine jits its decode/slot ops with these as
     both in- and out-shardings (cache donated), making that contract
     explicit to XLA.
+
+    The slot dim — dim 1 of every stacked ``(nl, S, ...)`` leaf and dim 0
+    of the ``(S,)`` per-slot ``pos`` vector — shards over ``rules.slots``
+    (the ``data`` mesh axis; DESIGN.md §8), so each data shard owns a
+    contiguous static block of slots end-to-end through the decode scan.
+    Head-like dims keep the TP heuristic of :func:`cache_sharding`.
+    ``num_slots``/``slot_shards``/``fallback_log`` follow
+    :func:`pool_slot_axes`; ``num_slots`` is inferred from the leaves when
+    omitted.
     """
-    return cache_sharding(mesh, rules, abstract)
+    if num_slots is None:
+        for x in jax.tree.leaves(abstract):
+            if len(x.shape) >= 2:
+                num_slots = int(x.shape[1])
+                break
+        else:                         # pragma: no cover — degenerate tree
+            num_slots = 1
+    saxes, _ = pool_slot_axes(mesh, rules, num_slots, slot_shards,
+                              fallback_log)
+    sax = _axis_entry(saxes)
+    maxes = tuple(a for a in _mesh_axes_present(mesh, rules.heads)
+                  if a not in saxes)
+    msize = int(np.prod([mesh.shape[a] for a in maxes], dtype=np.int64)) \
+        if maxes else 1
+    mx = _axis_entry(maxes)
+
+    def one(x):
+        shape = tuple(x.shape)
+        if len(shape) == 0:
+            return NamedSharding(mesh, P())
+        if len(shape) == 1:           # per-slot pos vector
+            return NamedSharding(
+                mesh, P(sax) if shape[0] == num_slots else P())
+        spec: list = [None] * len(shape)
+        if shape[1] == num_slots:
+            spec[1] = sax
+        # Shard the head-like axis (dim 2 for state/ssm, dim 3 for kv ring).
+        for cand in (3, 2):
+            if len(shape) > cand and shape[cand] % max(msize, 1) == 0 \
+                    and msize > 1 and shape[cand] >= msize:
+                spec[cand] = mx
+                break
+        while spec and spec[-1] is None:
+            spec.pop()
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(one, abstract)
 
 
-def serving_vector_sharding(mesh: Mesh) -> NamedSharding:
-    """Replicated sharding for the engine's per-slot control vectors.
+def serving_vector_sharding(mesh: Mesh,
+                            rules: ShardingRules = DEFAULT_RULES, *,
+                            num_slots: int,
+                            slot_shards: int = 0, leading: int = 0,
+                            fallback_log: list | None = None
+                            ) -> NamedSharding:
+    """Slot sharding for the engine's per-slot control vectors.
 
-    The macro-step decode signature carries (num_slots,)-shaped int32/bool
-    vectors — last token, active mask, request ids, per-slot generation
-    counts / EOS ids / budgets — plus the (K, num_slots) emitted-token
-    buffer it returns. These are a few hundred bytes; every device needs
-    the full active mask and token vector to run its shard of the pool
-    dispatch, so they replicate (sharding them would force an all-gather
-    inside the scan per tick). Pinning P() explicitly keeps the jitted
-    macro-step's in/out shardings fully specified alongside the donated
-    slot-stable cache.
+    The macro-step decode signature carries ``(num_slots,)``-shaped
+    int32/bool vectors — last token, active mask, request ids, per-slot
+    generation counts / EOS ids / budgets — plus the
+    ``(K, num_slots)``-shaped token/emitted buffers it returns
+    (``leading=1``). Every one of them carries the *same* slot sharding as
+    the pool cache: each data shard reads exactly its own slots' control
+    state and writes exactly its own slots' tokens, which is what keeps the
+    K-tick decode scan free of cross-shard collectives (DESIGN.md §8).
+    When the pool replicates (divisibility fallback, or a mesh without
+    slot axes) these replicate too — shardings always move in lockstep
+    with the cache, which is why ``num_slots`` is required: the
+    divisibility decision must be made from the same inputs here and in
+    :func:`serving_cache_sharding`.
     """
-    return NamedSharding(mesh, P())
+    saxes, _ = pool_slot_axes(mesh, rules, num_slots, slot_shards,
+                              fallback_log)
+    return NamedSharding(mesh, P(*([None] * leading), _axis_entry(saxes)))
 
 
 def cache_sharding(mesh: Mesh, rules: ShardingRules, abstract):

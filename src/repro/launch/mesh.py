@@ -24,3 +24,16 @@ def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
 def make_host_mesh():
     """Single-device mesh for CPU smoke runs (axes present, size 1)."""
     return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def make_serving_mesh(data: int = 1, model: int = 1):
+    """Serving mesh: ``data`` carries slot-pool sharding (DESIGN.md §8),
+    ``model`` carries TP. Uses the first data*model devices, so the
+    sharded-parity tests can build mesh=(1,) and mesh=(data=4,) side by
+    side in one forced-multi-device CPU process."""
+    if data * model > jax.device_count():
+        raise ValueError(
+            f"mesh ({data}x{model}) needs {data * model} devices, have "
+            f"{jax.device_count()} (set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=N on CPU)")
+    return jax.make_mesh((data, model), ("data", "model"))

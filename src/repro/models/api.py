@@ -59,16 +59,27 @@ def abstract_cache(cfg: ArchConfig, batch: int, max_len: int):
 # batch rows. Admission/eviction are single-slot overwrites — O(slot bytes),
 # no paging — because every regime's per-sequence decode state lives in
 # contiguous batch-indexed leaves (constant-state (S, z), KV rings, SSM
-# carries) with per-slot positions.
+# carries) with per-slot positions. Under a slot-sharded pool (DESIGN.md
+# §8) the slot dim is partitioned over the `data` mesh axis in contiguous
+# static blocks; both ops below are dynamic-updates along that dim, so
+# jitted with the pool's sharding as in- AND out-sharding (cache donated)
+# they lower to shard-local writes — only the owning shard's block mutates.
 
 
 def reset_slot(cfg: ArchConfig, cache, slot: int):
-    """Zero one slot (eviction). Slot-stable: other rows untouched."""
+    """Zero one slot (eviction). Slot-stable: other rows untouched — and
+    under a sharded pool, shard-local: only ``slot``'s static owner shard
+    writes; every other shard's bytes alias through the donated input."""
     return _mod(cfg).reset_slot(cfg, cache, slot)
 
 
 def write_slot(cfg: ArchConfig, cache, src, slot: int):
-    """Install a batch=1 request cache into a pool slot (admission)."""
+    """Install a batch=1 request cache into a pool slot (admission).
+
+    ``src`` (a freshly prefilled request cache) is replicated by the
+    engine's jit signature, so the prefill output lands directly on the
+    owning shard as part of the donated pool update — admission never
+    moves another shard's slot bytes or reshards the pool."""
     return _mod(cfg).write_slot(cfg, cache, src, slot)
 
 

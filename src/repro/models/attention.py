@@ -263,17 +263,21 @@ def decode_step(spec: AttentionSpec, params: dict | None, q, k, v,
     n_seen = cache.pos + (1 if act is None else act.astype(jnp.int32))
     if cache.pos.ndim:
         # Per-slot positions (continuous batching): each batch row writes
-        # its own ring slot and carries its own validity horizon.
-        b = jnp.arange(cache.pos.shape[0])
+        # its own ring slot and carries its own validity horizon. The
+        # write is a one-hot row select rather than a batch-indexed
+        # scatter: elementwise along the slot dim, it partitions cleanly
+        # when the pool is slot-sharded (a scatter with explicit batch
+        # indices forces GSPMD into all-gather/all-reduce — DESIGN.md §8),
+        # and the ring is already fully read by attention each tick, so
+        # bandwidth stays O(ring). Drained slots simply don't write.
         kw = k.astype(cache.k.dtype)
         vw = v.astype(cache.v.dtype)
+        write = jnp.arange(size)[None, :] == ring[:, None]       # (B, S)
         if act is not None:
-            # Drained slots re-write their current ring row (a no-op):
-            # one gather + scatter instead of a full-buffer select.
-            kw = jnp.where(act[:, None, None], kw, cache.k[b, ring])
-            vw = jnp.where(act[:, None, None], vw, cache.v[b, ring])
-        kbuf = cache.k.at[b, ring].set(kw)
-        vbuf = cache.v.at[b, ring].set(vw)
+            write = write & act[:, None]
+        wmask = write[:, :, None, None]               # vs (B, S, Hkv, dh)
+        kbuf = jnp.where(wmask, kw[:, None], cache.k)
+        vbuf = jnp.where(wmask, vw[:, None], cache.v)
         valid = (jnp.arange(size)[None, :]
                  < jnp.minimum(n_seen, size)[:, None])    # (B, S)
         valid = valid[:, None, None, :]                   # vs (B,Hkv,G,S)

@@ -2,4 +2,5 @@
 constant-state decode paths."""
 from repro.serving.engine import (ContinuousServingEngine,  # noqa: F401
                                   EngineMetrics, Request, Scheduler,
-                                  ServingEngine, jit_serve_fns)
+                                  ServingEngine, ServingMetrics,
+                                  jit_serve_fns)

@@ -44,9 +44,15 @@ from repro.serving import sampling
 def jit_serve_fns(cfg: ArchConfig, mesh, max_len: int,
                   rules: shd.ShardingRules = shd.DEFAULT_RULES,
                   batch: int | None = None):
-    """jit'd (prefill, decode_step) with rule-derived shardings.
+    """jit'd (prefill, decode_step) with rule-derived shardings — the
+    lockstep engine's entry points.
 
     decode_step donates the cache (in-place ring-buffer update on device).
+    When ``batch`` is given the cache sharding comes from
+    ``sharding.serving_cache_sharding``, which shards the batch (slot) dim
+    over the ``data`` mesh axis under the same slot-stable contract as the
+    continuous engine's pool (DESIGN.md §8): shardings derive from shapes
+    only, so in- and out-shardings agree and decode never reshards.
     """
     axes = api.param_axes(cfg)
     p_abs = api.abstract_params(cfg)
@@ -239,33 +245,42 @@ class RequestStats:
 
 
 @dataclasses.dataclass
-class EngineMetrics:
-    """Counters the engine updates every tick; ``summary()`` aggregates."""
+class ServingMetrics:
+    """Counters the engine updates every tick; ``summary()`` aggregates.
 
-    num_slots: int = 0
-    macro_ticks: int = 1
-    ticks: int = 0
-    decode_ticks: int = 0
-    prefill_ticks: int = 0
-    tokens_generated: int = 0
-    prompt_tokens: int = 0
-    requests_completed: int = 0
-    queue_depth_sum: int = 0
-    queue_depth_max: int = 0
-    occupancy_sum: int = 0
+    Units: *ticks* are the engine's logical clock (one scheduling decision
+    = one tick; backend-independent, what CI trends on); *wall* is host
+    ``time.perf_counter()`` seconds (meaningful on TPU only). Counters are
+    per engine lifetime unless noted.
+    """
+
+    num_slots: int = 0          # pool size the engine was built with (slots)
+    macro_ticks: int = 1        # K: decode ticks per jitted dispatch (ticks)
+    slot_shards: int = 1        # data-axis pool shards in effect (count)
+    ticks: int = 0              # engine clock: scheduling decisions (ticks)
+    decode_ticks: int = 0       # ticks that ran a pool decode step (ticks)
+    prefill_ticks: int = 0      # ticks that ran a prefill chunk (ticks)
+    tokens_generated: int = 0   # decode tokens emitted to requests (tokens)
+    prompt_tokens: int = 0      # prompt tokens absorbed by prefill (tokens)
+    requests_completed: int = 0  # requests finished (EOS or budget) (count)
+    queue_depth_sum: int = 0    # sum of ready-queue depth per tick (req*ticks)
+    queue_depth_max: int = 0    # peak ready-queue depth (requests)
+    occupancy_sum: int = 0      # sum of live slots per tick (slots*ticks)
     # Hot-loop sync cadence. decode_dispatches counts jitted macro-step
-    # calls (one per K decode ticks, whole pool — never per slot);
-    # host_syncs counts blocking device->host pulls in the decode loop
-    # (the (K, S) token buffer, one per dispatch). Prefill first-token
+    # calls (one per K decode ticks, whole pool — never per slot or per
+    # shard); host_syncs counts blocking device->host pulls in the decode
+    # loop (the (K, S) token buffer, one per dispatch). Prefill first-token
     # pulls are tracked separately (prefill_token_syncs): they are one
     # int32 scalar per admitted request, off the per-token hot loop.
-    decode_dispatches: int = 0
-    host_syncs: int = 0
-    prefill_token_syncs: int = 0
-    bucket_hits: int = 0              # bucketed fallback prefill reuse
-    bucket_misses: int = 0            # first compile of a bucket length
-    wall_start: float = dataclasses.field(default_factory=time.perf_counter)
-    per_request: dict = dataclasses.field(default_factory=dict)
+    decode_dispatches: int = 0  # jitted K-tick macro-step calls (count)
+    host_syncs: int = 0         # blocking device->host pulls, decode (count)
+    prefill_token_syncs: int = 0  # first-token scalar pulls at admit (count)
+    bucket_hits: int = 0        # fallback prefill reusing a bucket (count)
+    bucket_misses: int = 0      # first compile of a bucket length (count)
+    wall_start: float = dataclasses.field(  # engine construction time (wall)
+        default_factory=time.perf_counter)
+    per_request: dict = dataclasses.field(  # rid -> RequestStats
+        default_factory=dict)
 
     def sample(self, queue_depth: int, occupancy: int):
         self.queue_depth_sum += queue_depth
@@ -291,6 +306,7 @@ class EngineMetrics:
             "tokens_generated": self.tokens_generated,
             "prompt_tokens": self.prompt_tokens,
             "macro_ticks": self.macro_ticks,
+            "slot_shards": self.slot_shards,
             "decode_dispatches": self.decode_dispatches,
             "host_syncs": self.host_syncs,
             "prefill_token_syncs": self.prefill_token_syncs,
@@ -317,6 +333,9 @@ class EngineMetrics:
         }
 
 
+EngineMetrics = ServingMetrics   # pre-§8 name, kept for callers
+
+
 @dataclasses.dataclass
 class _Slot:
     """One live sequence in the decode pool."""
@@ -341,19 +360,37 @@ class _Prefill:
 class Scheduler:
     """Owns the slot pool and the admission queue.
 
-    Policy: FIFO admission into the lowest free slot; at most one prefill
-    in flight (chunked, so a long prompt yields to decode ticks between
-    chunks); decode and prefill strictly interleave per
+    Policy: FIFO admission order; the *slot* a request lands in is chosen
+    shard-aware — the free slot whose data shard currently serves the
+    fewest live requests (ties break to the lowest slot id, which with a
+    single shard reduces to the pre-§8 lowest-free-slot policy). At most
+    one prefill is in flight (chunked, so a long prompt yields to decode
+    ticks between chunks); decode and prefill strictly interleave per
     ``decode_ticks_per_prefill`` when both have work.
+
+    Shard awareness: slot->shard ownership is *static* — with S slots over
+    N shards, shard k owns the contiguous block [k*S/N, (k+1)*S/N), the
+    same split GSPMD applies to the slot-sharded pool cache — so admission
+    and eviction never migrate state across shards, only overwrite
+    shard-local slot blocks. Balancing admissions across shards keeps
+    every data shard's masked decode work even under partial load. Token
+    streams never depend on the slot (or shard) chosen: sampling is keyed
+    on (seed, rid, token-index) only.
     """
 
-    def __init__(self, serving: ServingConfig):
+    def __init__(self, serving: ServingConfig, slot_shards: int = 1):
         self.serving = serving
+        self.slot_shards = max(slot_shards, 1)
+        self.slots_per_shard = serving.num_slots // self.slot_shards
         self.free: list[int] = list(range(serving.num_slots))
         self.active: dict[int, _Slot] = {}
         self.waiting: collections.deque = collections.deque()  # (rid, req)
         self.ready: collections.deque = collections.deque()
         self._decode_since_prefill = serving.decode_ticks_per_prefill
+
+    def shard_of(self, slot: int) -> int:
+        """Static owner shard of ``slot`` (GSPMD contiguous-block split)."""
+        return slot // self.slots_per_shard
 
     def submit(self, rid: int, req: Request):
         if (self.serving.max_queue
@@ -371,11 +408,19 @@ class Scheduler:
             self.ready.append(self.waiting.popleft())
 
     def next_admission(self):
-        """Pop the request to admit next, reserving a slot — or None."""
+        """Pop the request to admit next, reserving a slot — or None.
+
+        The slot comes from the least-loaded shard (see class docstring);
+        request order itself stays strictly FIFO."""
         if not self.ready or not self.free:
             return None
         rid, req = self.ready.popleft()
-        return rid, req, self.free.pop(0)
+        load = [0] * self.slot_shards
+        for slot in self.active:
+            load[self.shard_of(slot)] += 1
+        slot = min(self.free, key=lambda s: (load[self.shard_of(s)], s))
+        self.free.remove(slot)
+        return rid, req, slot
 
     def evict(self, slot: int):
         del self.active[slot]
@@ -434,6 +479,15 @@ class ContinuousServingEngine:
     *bucket* (right-padded, masked exactly via ``true_len``), except for
     SSM/hybrid/encdec which have no masked form and stay per-length.
     :meth:`jit_cache_entries` exposes the live counts (CI budgets them).
+
+    Sharding (DESIGN.md §8): the slot pool — cache, control vectors, and
+    the (K, S) token buffers — shards over the mesh ``data`` axis per
+    ``serving.slot_shards``; slot->shard ownership is static and the
+    decode macro-step contains no cross-shard collectives
+    (:meth:`decode_hlo` exposes the compiled HLO the contract test greps).
+    Params replicate over the slot axes (``sharding.serving_param_rules``).
+    Token streams for a fixed trace are byte-identical across mesh shapes:
+    sampling is keyed on (seed, rid, token-index), never on placement.
     """
 
     def __init__(self, cfg: ArchConfig, params, mesh, *,
@@ -442,9 +496,20 @@ class ContinuousServingEngine:
         self.cfg, self.params, self.mesh = cfg, params, mesh
         self.serving = serving
         self.rules = rules
-        self.sched = Scheduler(serving)
-        self.metrics = EngineMetrics(num_slots=serving.num_slots,
-                                     macro_ticks=serving.macro_ticks)
+        S, L = serving.num_slots, serving.max_len
+        # Resolve the slot-pool sharding once (static for the engine's
+        # lifetime): shard the pool over the `data` mesh axis per
+        # serving.slot_shards, falling back to a replicated pool when
+        # num_slots is not divisible (recorded like the rule-engine
+        # divisibility fallback; surfaced in metrics/bench rows).
+        self.slot_shard_fallbacks: list = []
+        _, self.slot_shards = shd.pool_slot_axes(
+            mesh, rules, S, serving.slot_shards,
+            self.slot_shard_fallbacks)
+        self.sched = Scheduler(serving, self.slot_shards)
+        self.metrics = ServingMetrics(num_slots=serving.num_slots,
+                                      macro_ticks=serving.macro_ticks,
+                                      slot_shards=self.slot_shards)
         self.tick = 0
         self._next_rid = 0
         self._outputs: dict[int, list] = {}
@@ -454,15 +519,30 @@ class ContinuousServingEngine:
                             and api.supports_masked_prefill(cfg))
         self._seen_buckets: set[int] = set()
 
-        S, L = serving.num_slots, serving.max_len
         axes = api.param_axes(cfg)
         p_abs = api.abstract_params(cfg)
-        p_sh = shd.logical_to_sharding(mesh, rules, p_abs, axes)
+        # Params replicate over the slot (data) axes at serving time —
+        # FSDP-sharded weights would all-gather inside every decode tick
+        # (DESIGN.md §8 zero-collective contract).
+        p_sh = shd.logical_to_sharding(mesh, shd.serving_param_rules(rules),
+                                       p_abs, axes)
         c_abs = api.abstract_cache(cfg, S, L)
-        c_sh = shd.serving_cache_sharding(mesh, rules, c_abs)
-        v_sh = shd.serving_vector_sharding(mesh)
+        c_sh = shd.serving_cache_sharding(
+            mesh, rules, c_abs, num_slots=S,
+            slot_shards=serving.slot_shards)
+        # Per-slot control vectors and the (K, S) token/emitted buffers
+        # carry the same slot sharding as the pool cache.
+        v_sh = shd.serving_vector_sharding(mesh, rules, num_slots=S,
+                                           slot_shards=serving.slot_shards)
+        buf_sh = shd.serving_vector_sharding(
+            mesh, rules, num_slots=S, slot_shards=serving.slot_shards,
+            leading=1)
+        rep_sh = jax.sharding.NamedSharding(mesh,
+                                            jax.sharding.PartitionSpec())
+        self._abstract = (p_abs, c_abs)
         with mesh:
             self.pool = jax.device_put(api.init_cache(cfg, S, L), c_sh)
+            self.params = jax.device_put(params, p_sh)
         # Host mirrors of the per-slot decode vectors fed to the jitted
         # macro-step. The replay loop applies the *same* emit/EOS/budget
         # logic as the device scan, so mirrors and device state never
@@ -475,23 +555,28 @@ class ContinuousServingEngine:
         self._eos = np.full(S, -1, np.int32)
         self._maxn = np.zeros(S, np.int32)
         # The decode hot loop: one jitted K-tick macro-step for the whole
-        # pool (donated cache, fused sampling, masked drained slots).
+        # pool (donated cache, fused sampling, masked drained slots). Every
+        # input/output carries the slot sharding, so the scan partitions
+        # into independent per-shard slot blocks — no collectives (§8).
         self._macro_fn = jax.jit(
             functools.partial(_macro_decode, cfg=cfg,
                               num_ticks=serving.macro_ticks,
                               temperature=serving.temperature,
                               seed=serving.seed),
             in_shardings=(p_sh, c_sh) + (v_sh,) * 6,
-            out_shardings=(c_sh, v_sh, v_sh), donate_argnums=(1,))
+            out_shardings=(c_sh, buf_sh, buf_sh), donate_argnums=(1,))
         self._sample_fn = jax.jit(
             functools.partial(sampling.sample_tokens,
                               temperature=serving.temperature,
                               seed=serving.seed))
         # Slot ops: slot index is a traced scalar -> one compile each, and
         # out-shardings pinned to the pool's (slot-stable, never reshards).
+        # The batch=1 source cache is pinned replicated, so a write_slot is
+        # a shard-local donated dynamic-update: only the owning shard's
+        # block changes, the others alias their input bytes.
         self._write_fn = jax.jit(
             lambda pool, src, i: api.write_slot(cfg, pool, src, i),
-            in_shardings=(c_sh, None, None), out_shardings=c_sh,
+            in_shardings=(c_sh, rep_sh, None), out_shardings=c_sh,
             donate_argnums=(0,))
         self._reset_fn = jax.jit(
             lambda pool, i: api.reset_slot(cfg, pool, i),
@@ -693,6 +778,21 @@ class ContinuousServingEngine:
             except Exception:         # pragma: no cover — jax internals
                 continue
         return out
+
+    def decode_hlo(self) -> str:
+        """Compiled HLO of the decode macro-step at the engine's shapes and
+        shardings — the §8 zero-collective contract surface: on a slot-
+        sharded mesh this text must contain no all-reduce / all-gather /
+        reduce-scatter / collective-permute / all-to-all (the sharded-
+        parity tests grep it). Compiles (cached) but never executes."""
+        p_abs, c_abs = self._abstract
+        S = self.serving.num_slots
+        i32 = jax.ShapeDtypeStruct((S,), jnp.int32)
+        b1 = jax.ShapeDtypeStruct((S,), jnp.bool_)
+        with self.mesh:
+            lowered = self._macro_fn.lower(p_abs, c_abs, i32, b1, i32, i32,
+                                           i32, i32)
+        return lowered.compile().as_text()
 
     def _emit(self, rec: _Slot, tok: int):
         rec.tokens.append(tok)

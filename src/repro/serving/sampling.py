@@ -12,6 +12,13 @@ in a full pool, tick-by-tick (K=1), or K ticks per dispatch, and
 :func:`host_sample_token` reproduces the fused sampler exactly on the same
 backend (the parity oracle for tests).
 
+The same property makes sampling *slot-shard-placement-invariant*
+(DESIGN.md §8): under a data-axis-sharded slot pool each shard evaluates
+the identical ``fold_in``-keyed Gumbel row for its own slots' (rid, idx)
+pairs, so token streams are byte-identical between mesh=(1,) and
+mesh=(data=N,) — nothing here reads the mesh, the slot index, or the
+shard.
+
 Greedy (``temperature <= 0``) is a plain fp32 argmax: ``jnp.argmax`` and
 ``np.argmax`` both take the first maximum, so device and host agree
 bit-for-bit on identical logits.

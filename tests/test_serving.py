@@ -372,6 +372,15 @@ def test_serving_bench_smoke_emits_json(tmp_path, monkeypatch):
     rows = payload["results"]
     loads = {(r["regime"], r["load"]) for r in rows}
     assert len({ld for _, ld in loads}) >= 2          # >= 2 load levels
-    assert {rg for rg, _ in loads} == {"constant_state", "kv_ring"}
+    assert {rg for rg, _ in loads} == {"constant_state", "kv_ring",
+                                       "constant_state_sharded"}
     for r in rows:
         assert "decode_tokens_per_s" in r and "ttft_ticks_p50" in r
+        assert "stream_digest" in r
+    # §8 byte-identity: the sharded row replays the single-shard trace.
+    sharded = next(r for r in rows
+                   if r["regime"] == "constant_state_sharded")
+    assert sharded["slot_shards"] > 1
+    base = next(r for r in rows if r["regime"] == "constant_state"
+                and r["load"] == sharded["load"])
+    assert sharded["stream_digest"] == base["stream_digest"]

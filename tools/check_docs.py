@@ -1,0 +1,102 @@
+"""Docs-integrity check: the documentation contract CI (and tier-1, via
+tests/test_docs.py) enforces.
+
+Asserts that
+  * README.md exists and contains every required section anchor,
+  * DESIGN.md contains the §8 (sharded serving) anchor — and every other
+    section its docstring citations rely on,
+  * every intra-repo relative link in the checked docs resolves to a real
+    file (fenced code blocks are ignored; http(s)/mailto/#fragment links
+    are skipped).
+
+Run from anywhere:
+
+    python tools/check_docs.py
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# Section anchors the README must carry (the contract the repo's other
+# docs and the ISSUE/CI pipeline point at).
+README_ANCHORS = (
+    "## What SLAY is",
+    "## Install",
+    "## Verify (tier 1)",
+    "## Benchmarks",
+    "## Repo layout",
+    "## Design notes",
+)
+
+# DESIGN.md section anchors cited by docstrings across src/repro.
+DESIGN_ANCHORS = (
+    "## §1", "## §2", "## §3", "## §4", "## §5", "## §6", "## §7", "## §8",
+)
+
+# Docs whose relative links must resolve.
+LINK_CHECKED = ("README.md", "DESIGN.md", "ROADMAP.md")
+
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_FENCE = re.compile(r"```.*?```", re.DOTALL)
+
+
+def _fail(errors: list[str], msg: str):
+    errors.append(msg)
+
+
+def check(repo: str = REPO) -> list[str]:
+    errors: list[str] = []
+
+    readme = os.path.join(repo, "README.md")
+    if not os.path.exists(readme):
+        _fail(errors, "README.md missing")
+    else:
+        text = open(readme).read()
+        for anchor in README_ANCHORS:
+            if anchor not in text:
+                _fail(errors, f"README.md: missing anchor {anchor!r}")
+
+    design = os.path.join(repo, "DESIGN.md")
+    if not os.path.exists(design):
+        _fail(errors, "DESIGN.md missing")
+    else:
+        text = open(design).read()
+        for anchor in DESIGN_ANCHORS:
+            if anchor not in text:
+                _fail(errors, f"DESIGN.md: missing anchor {anchor!r}")
+
+    for name in LINK_CHECKED:
+        path = os.path.join(repo, name)
+        if not os.path.exists(path):
+            continue                      # absence reported above if fatal
+        body = _FENCE.sub("", open(path).read())
+        for target in _LINK.findall(body):
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            rel = target.split("#")[0]
+            if not rel:
+                continue
+            if not os.path.exists(os.path.join(os.path.dirname(path), rel)):
+                _fail(errors, f"{name}: broken relative link -> {target}")
+
+    return errors
+
+
+def main() -> int:
+    errors = check()
+    if errors:
+        for e in errors:
+            print(f"DOCS FAIL: {e}", file=sys.stderr)
+        return 1
+    print(f"docs OK: README anchors={len(README_ANCHORS)}, "
+          f"DESIGN anchors={len(DESIGN_ANCHORS)}, "
+          f"links checked in {', '.join(LINK_CHECKED)}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
