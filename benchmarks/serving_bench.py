@@ -19,9 +19,12 @@ serving perf trajectory CI tracks per PR:
 
 Both cache regimes run: the constant-state SLAY path (slot overwrite
 eviction) and the KV-ring softmax baseline (same scheduler, O(max_len)
-slot state), so the JSON shows the serving asymmetry directly. A third
-``constant_state_sharded`` row replays the last constant_state trace on a
-mesh=(data=N,) slot-sharded pool in a forced-multi-device subprocess
+slot state), so the JSON shows the serving asymmetry directly. Two
+scan-carry rows (``ssm_scan`` = mamba2, ``hybrid_scan`` = hymba) track
+exact chunked-prefill continuation for the SSD families (DESIGN.md §9) —
+their bucket counters must read zero (fallback retired; CI asserts it).
+A ``constant_state_sharded`` row replays the last constant_state trace on
+a mesh=(data=N,) slot-sharded pool in a forced-multi-device subprocess
 (``benchmarks/serving_sharded_row.py``); every row carries a
 ``stream_digest`` (sha256 of the rid-ordered token streams) and the CI
 contract step asserts the sharded digest equals the single-shard one —
@@ -125,6 +128,47 @@ def _sharded_row(p: dict, load: float) -> dict:
     return json.loads(proc.stdout.splitlines()[-1])
 
 
+def _trace_row(cfg, params, mesh, p: dict, load: float, regime: str,
+               results: list, rows: list):
+    """Run one (config, load) Poisson trace; append BenchResults + a JSON
+    row, asserting the backend-independent hot-loop contract."""
+    rng = np.random.default_rng(1234)
+    reqs = _poisson_trace(rng, p["n"], load, p["prompt"],
+                          cfg.vocab_size, p["max_new"])
+    eng = ContinuousServingEngine(
+        cfg, params, mesh,
+        serving=ServingConfig(num_slots=p["num_slots"],
+                              max_len=p["max_len"],
+                              prefill_chunk=p["prefill_chunk"],
+                              macro_ticks=_MACRO_TICKS))
+    outs, summary = eng.run(reqs)
+    assert summary["requests_completed"] == p["n"]
+    # Hot-loop contract (backend-independent): one pooled dispatch
+    # covers >= 1 decode tick, and the decode loop syncs to host
+    # at most once per K generated tokens.
+    assert summary["dispatches_per_decode_tick"] <= 1.0 + 1e-9
+    assert summary["host_syncs_per_token"] <= 1.0 / _MACRO_TICKS \
+        + 1e-9, summary["host_syncs_per_token"]
+    jit_entries = eng.jit_cache_entries()
+    # Missing key = jax introspection unavailable, not a recompile.
+    assert jit_entries.get("macro_decode", 1) == 1, jit_entries
+    tag = f"serving/{regime}/load{load:g}"
+    for key in ("decode_tokens_per_s", "ttft_ticks_p50",
+                "ttft_ticks_p95", "mean_slot_occupancy",
+                "mean_queue_depth", "host_syncs_per_token",
+                "tokens_per_dispatch"):
+        unit = ("tok/s" if "per_s" in key
+                else "ticks" if "ttft" in key else "ratio")
+        results.append(BenchResult(
+            f"{tag}/{key}", float(summary[key]), unit,
+            extra={"regime": regime, "load": load}))
+    rows.append({"regime": regime, "load": load,
+                 "num_slots": p["num_slots"],
+                 "requests": p["n"],
+                 "stream_digest": _stream_digest(outs),
+                 "jit_cache_entries": jit_entries, **summary})
+
+
 def run(quick: bool = True, smoke: bool = False):
     p = _SMOKE if smoke else (_QUICK if quick else _FULL)
     mesh = make_host_mesh()
@@ -136,41 +180,23 @@ def run(quick: bool = True, smoke: bool = False):
                                        attn_kind=attn_kind)
         params = api.init_params(cfg, jax.random.PRNGKey(0))
         for load in p["loads"]:
-            rng = np.random.default_rng(1234)
-            reqs = _poisson_trace(rng, p["n"], load, p["prompt"],
-                                  cfg.vocab_size, p["max_new"])
-            eng = ContinuousServingEngine(
-                cfg, params, mesh,
-                serving=ServingConfig(num_slots=p["num_slots"],
-                                      max_len=p["max_len"],
-                                      prefill_chunk=p["prefill_chunk"],
-                                      macro_ticks=_MACRO_TICKS))
-            outs, summary = eng.run(reqs)
-            assert summary["requests_completed"] == p["n"]
-            # Hot-loop contract (backend-independent): one pooled dispatch
-            # covers >= 1 decode tick, and the decode loop syncs to host
-            # at most once per K generated tokens.
-            assert summary["dispatches_per_decode_tick"] <= 1.0 + 1e-9
-            assert summary["host_syncs_per_token"] <= 1.0 / _MACRO_TICKS \
-                + 1e-9, summary["host_syncs_per_token"]
-            jit_entries = eng.jit_cache_entries()
-            # Missing key = jax introspection unavailable, not a recompile.
-            assert jit_entries.get("macro_decode", 1) == 1, jit_entries
-            tag = f"serving/{regime}/load{load:g}"
-            for key in ("decode_tokens_per_s", "ttft_ticks_p50",
-                        "ttft_ticks_p95", "mean_slot_occupancy",
-                        "mean_queue_depth", "host_syncs_per_token",
-                        "tokens_per_dispatch"):
-                unit = ("tok/s" if "per_s" in key
-                        else "ticks" if "ttft" in key else "ratio")
-                results.append(BenchResult(
-                    f"{tag}/{key}", float(summary[key]), unit,
-                    extra={"regime": regime, "load": load}))
-            rows.append({"regime": regime, "load": load,
-                         "num_slots": p["num_slots"],
-                         "requests": p["n"],
-                         "stream_digest": _stream_digest(outs),
-                         "jit_cache_entries": jit_entries, **summary})
+            _trace_row(cfg, params, mesh, p, load, regime, results, rows)
+
+    # Scan-carry prefill rows (DESIGN.md §9): ssm/hybrid serve through
+    # exact chunked-prefill continuation — the bucketed masked-prefill
+    # fallback is retired for them, so the bucket counters must stay at
+    # zero (the CI serving contract step re-asserts this from the JSON)
+    # and prefill progresses chunk-by-chunk in the tick trajectory.
+    for regime, arch in (("ssm_scan", "mamba2-780m"),
+                         ("hybrid_scan", "hymba-1.5b")):
+        cfg = configs.get_smoke_config(arch)
+        assert api.supports_chunked_prefill(cfg), arch
+        params = api.init_params(cfg, jax.random.PRNGKey(0))
+        load = p["loads"][-1]
+        _trace_row(cfg, params, mesh, p, load, regime, results, rows)
+        row = rows[-1]
+        assert row["bucket_misses"] == 0 == row["bucket_hits"], row
+        assert row["prefill_ticks"] > 0, row
 
     # Sharded-pool variant (DESIGN.md §8): same trace as the last
     # constant_state load, slot pool sharded over mesh=(data=N,). The

@@ -165,10 +165,13 @@ class ServingConfig:
     trades admission/streaming granularity (up to K ticks) for ~K× fewer
     host syncs and dispatches. K=1 recovers per-tick behavior.
 
-    ``prefill_buckets`` pads non-chunkable prefill fallbacks (exact-yat
-    kinds, frontends) to pow-2 length buckets (>= ``prefill_bucket_min``,
-    capped at ``max_len``) so they compile once per bucket instead of once
-    per distinct prompt length; masked out exactly via ``true_len``.
+    ``prefill_buckets`` pads the non-chunkable prefill fallback to pow-2
+    length buckets (>= ``prefill_bucket_min``, capped at ``max_len``) so
+    it compiles once per bucket instead of once per distinct prompt
+    length; masked out exactly via ``true_len``. Only modality frontends
+    still take this fallback — every decoder-only config (ssm/hybrid and
+    the exact yat kinds included) prefills chunk-by-chunk since
+    DESIGN.md §9.
 
     ``slot_shards`` partitions the slot pool over the mesh ``data`` axis
     (DESIGN.md §8): 0 = auto (shard over the whole data axis when

@@ -84,12 +84,21 @@ def write_slot(cfg: ArchConfig, cache, src, slot: int):
 
 
 def supports_chunked_prefill(cfg: ArchConfig) -> bool:
-    """Whether prefill can be fed chunk-by-chunk with state continuation."""
+    """Whether prefill can be fed chunk-by-chunk with state continuation.
+
+    True for every decoder-only config — all attention kinds (linear,
+    softmax, exact yat) and the ssm/hybrid scan-carry families
+    (DESIGN.md §9). False only for modality frontends (vision prefix is
+    absorbed whole) and encdec."""
     return _mod(cfg).supports_chunked_prefill(cfg)
 
 
 def prefill_chunk(cfg: ArchConfig, params, cache, tokens):
-    """Absorb one prompt chunk into an existing cache; last-token logits."""
+    """Absorb one prompt chunk into an existing cache; last-token logits.
+
+    Exact continuation for any chunk schedule: linear (S, z) and SSM
+    (scan + conv-tail) carries are fp32; quadratic kinds re-attend the
+    ring prefix."""
     return _mod(cfg).prefill_chunk(params, cfg, cache, tokens)
 
 

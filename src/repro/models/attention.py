@@ -154,12 +154,14 @@ def prefill_chunk(spec: AttentionSpec, params: dict | None, q, k, v,
     q (B, Lc, H, Dh), k/v (B, Lc, Hkv, *); ``cache.pos`` is the per-slot
     (B,) count of tokens already absorbed. This is the chunked-prefill
     primitive: feeding a prompt chunk-by-chunk reproduces the whole-prompt
-    prefill (linear kinds: exact same fp32 state recurrence; softmax: exact
-    attention against the ring prefix + causal intra-chunk scores).
+    prefill (linear kinds: exact same fp32 state recurrence; softmax and
+    the exact quadratic yat kinds: exact attention against the ring prefix
+    + causal intra-chunk scores).
 
-    Supported kinds: every linear kind, and softmax (windowed or not).
-    The exact quadratic yat kinds have no incremental form here — callers
-    fall back to whole-prompt prefill for them.
+    Supported kinds: every linear kind, softmax (windowed or not), and the
+    exact yat kinds (``yat`` / ``yat_spherical`` — same ring-prefix
+    continuation, with scores used as nonnegative kernel weights under
+    kernel normalization instead of a softmax, DESIGN.md §9).
     """
     B, Lc = q.shape[0], q.shape[1]
     start = cache.pos                                     # (B,)
@@ -170,7 +172,7 @@ def prefill_chunk(spec: AttentionSpec, params: dict | None, q, k, v,
             qf, kf, v, chunk_size=max(min(spec.chunk_size, Lc), 1),
             init_state=la.LinearState(cache.s, cache.z), return_state=True)
         return out, AttnCache(None, None, start + Lc, st.s, st.z)
-    if spec.kind != "softmax":
+    if spec.kind not in ("softmax", "yat", "yat_spherical"):
         raise NotImplementedError(
             f"chunked prefill not supported for kind={spec.kind!r}")
 
@@ -190,26 +192,38 @@ def prefill_chunk(spec: AttentionSpec, params: dict | None, q, k, v,
         pre_ok = pre_ok & (p[:, :, None] - a0[:, None, :] < spec.window)
     else:
         pre_ok = jnp.broadcast_to(pre_ok[:, None, :], (B, Lc, size))
-    kb, vb = cache.k.astype(q.dtype), cache.v.astype(q.dtype)
-    s_pre = jnp.einsum("blkgd,bskd->blkgs", qg, kb)       # (B,Lc,Hkv,G,S)
-    s_in = jnp.einsum("blkgd,btkd->blkgt", qg, k.astype(q.dtype))
     rel = jnp.arange(Lc)[:, None] - jnp.arange(Lc)[None, :]
     in_ok = rel >= 0
     if spec.window:
         in_ok = in_ok & (rel < spec.window)
-    scores = jnp.concatenate([s_pre, s_in], axis=-1) / jnp.sqrt(
-        jnp.asarray(dh, q.dtype))
-    if spec.logit_softcap:
-        scores = spec.logit_softcap * jnp.tanh(scores / spec.logit_softcap)
     mask = jnp.concatenate([
         jnp.broadcast_to(pre_ok[:, :, None, None, :], (B, Lc, 1, 1, size)),
         jnp.broadcast_to(in_ok[None, :, None, None, :], (B, Lc, 1, 1, Lc)),
-    ], axis=-1)
-    scores = jnp.where(mask, scores, jnp.finfo(scores.dtype).min)
-    probs = jax.nn.softmax(scores.astype(jnp.float32), -1).astype(q.dtype)
-    v_all = jnp.concatenate([vb, v.astype(q.dtype)], axis=1)
-    y = jnp.einsum("blkgs,bskd->blkgd", probs, v_all)
-    y = y.reshape(B, Lc, hkv * g, v.shape[-1])
+    ], axis=-1)                                           # (B,Lc,1,1,S+Lc)
+    k_all = jnp.concatenate([cache.k.astype(q.dtype),
+                             k.astype(q.dtype)], axis=1)  # (B,S+Lc,Hkv,Dh)
+    v_all = jnp.concatenate([cache.v.astype(q.dtype),
+                             v.astype(q.dtype)], axis=1)
+    if spec.kind in ("yat", "yat_spherical"):
+        # Exact yat continuation: masked positions get zero kernel weight
+        # (not -inf — yat normalizes by the weight sum, not a softmax).
+        # k_all broadcasts over the Lc query axis via a size-1 dim.
+        scores = jnp.where(mask, _yat_scores(spec.kind, qg,
+                                             k_all[:, None]), 0.0)
+        num = jnp.einsum("blkgs,bskd->blkgd", scores, v_all)
+        den = jnp.sum(scores, axis=-1)[..., None] + 1e-6
+        y = (num / den).reshape(B, Lc, hkv * g, v.shape[-1])
+    else:
+        scores = jnp.einsum("blkgd,bskd->blkgs", qg, k_all) / jnp.sqrt(
+            jnp.asarray(dh, q.dtype))
+        if spec.logit_softcap:
+            scores = spec.logit_softcap * jnp.tanh(
+                scores / spec.logit_softcap)
+        scores = jnp.where(mask, scores, jnp.finfo(scores.dtype).min)
+        probs = jax.nn.softmax(scores.astype(jnp.float32), -1).astype(
+            q.dtype)
+        y = jnp.einsum("blkgs,bskd->blkgd", probs, v_all)
+        y = y.reshape(B, Lc, hkv * g, v.shape[-1])
     # Commit the chunk's keys/values to the ring — only the trailing `size`
     # tokens when the chunk is longer than the ring (duplicate scatter
     # indices would otherwise race).
@@ -220,6 +234,24 @@ def prefill_chunk(spec: AttentionSpec, params: dict | None, q, k, v,
     kbuf = cache.k.at[b, idx].set(k[:, Lc - take:].astype(cache.k.dtype))
     vbuf = cache.v.at[b, idx].set(v[:, Lc - take:].astype(cache.v.dtype))
     return y, AttnCache(kbuf, vbuf, start + Lc, None, None)
+
+
+def _yat_scores(kind: str, qg, kb):
+    """Exact yat kernel weights (paper Eq. 1 / Eq. 5 with the reference
+    eps constants) for grouped queries qg (..., Hkv, G, Dh) against keys
+    kb (..., S, Hkv, Dh) -> (..., Hkv, G, S). One source of truth for the
+    decode step and the chunked-prefill continuation — callers mask and
+    kernel-normalize (weights, not logits: masked-out positions get 0)."""
+    if kind == "yat_spherical":
+        from repro.core.features import normalize
+        x = jnp.einsum("...kgd,...skd->...kgs", normalize(qg),
+                       normalize(kb))
+        return jnp.square(x) / (2.0 + 1e-3 - 2.0 * x)
+    x = jnp.einsum("...kgd,...skd->...kgs", qg, kb)
+    q2 = jnp.sum(jnp.square(qg), -1)[..., None]          # (..., Hkv, G, 1)
+    k2 = jnp.moveaxis(jnp.sum(jnp.square(kb), -1), -2, -1)[
+        ..., :, None, :]                                 # (..., Hkv, 1, S)
+    return jnp.square(x) / (jnp.maximum(q2 + k2 - 2 * x, 0.0) + 1e-3)
 
 
 def decode_step(spec: AttentionSpec, params: dict | None, q, k, v,
@@ -296,18 +328,7 @@ def decode_step(spec: AttentionSpec, params: dict | None, q, k, v,
     vb = vbuf.astype(q.dtype)
 
     if spec.kind in ("yat", "yat_spherical"):
-        if spec.kind == "yat_spherical":
-            from repro.core.features import normalize
-            qs, ks = normalize(qg), normalize(kb)
-            x = jnp.einsum("...kgd,...skd->...kgs", qs, ks)
-            scores = jnp.square(x) / (2.0 + 1e-3 - 2.0 * x)
-        else:
-            x = jnp.einsum("...kgd,...skd->...kgs", qg, kb)
-            q2 = jnp.sum(jnp.square(qg), -1)[..., None]        # (...,Hkv,G,1)
-            k2 = jnp.moveaxis(jnp.sum(jnp.square(kb), -1), -2, -1)[
-                ..., :, None, :]                               # (...,Hkv,1,S)
-            scores = jnp.square(x) / (jnp.maximum(q2 + k2 - 2 * x, 0.) + 1e-3)
-        scores = jnp.where(valid, scores, 0.0)
+        scores = jnp.where(valid, _yat_scores(spec.kind, qg, kb), 0.0)
         num = jnp.einsum("...kgs,...skd->...kgd", scores, vb)
         den = jnp.sum(scores, axis=-1)[..., None] + 1e-6
         y = (num / den).reshape(*q.shape[:-1], dv)

@@ -60,25 +60,67 @@ def _split_proj(params, x, d_model, d_state, expand, head_dim, ngroups):
     return z, xs, b, c, dt, d_inner, nheads
 
 
-def _causal_conv(params, u, w: int):
-    """Depthwise causal conv, width w. u (..., L, C)."""
-    pad = jnp.pad(u, [(0, 0)] * (u.ndim - 2) + [(w - 1, 0), (0, 0)])
-    out = sum(pad[..., i:i + u.shape[-2], :] * params["conv_w"][i]
+def _causal_conv(params, u, w: int, tail=None):
+    """Depthwise causal conv, width w. u (..., L, C) -> (out, new tail).
+
+    ``tail`` (..., W-1, C) is the previous chunk's pre-conv rows (chunked
+    prefill continuation); None means a fresh sequence start (zero left
+    context). The new tail is the last W-1 rows of [tail, u] — what the
+    next chunk's first positions need as their left context."""
+    if tail is None:
+        tail = jnp.zeros((*u.shape[:-2], w - 1, u.shape[-1]), u.dtype)
+    hist = jnp.concatenate([tail.astype(u.dtype), u], axis=-2)
+    out = sum(hist[..., i:i + u.shape[-2], :] * params["conv_w"][i]
               for i in range(w))
-    return jax.nn.silu(out + params["conv_b"])
+    return jax.nn.silu(out + params["conv_b"]), hist[..., u.shape[-2]:, :]
 
 
 def ssd_forward(params: dict, x: jnp.ndarray, *, d_state: int,
                 expand: int = 2, head_dim: int = 64, ngroups: int = 1,
                 conv_width: int = 4, chunk_size: int = 256) -> jnp.ndarray:
-    """Full-sequence SSD block. x (B, L, d_model) -> (B, L, d_model)."""
+    """Full-sequence SSD block. x (B, L, d_model) -> (B, L, d_model).
+
+    Implemented as :func:`ssd_prefill_chunk` from the zero state — the
+    training forward and the serving chunked-prefill continuation are the
+    same code path, so chunk-by-chunk prefill is structurally exact
+    (DESIGN.md §9)."""
+    state = ssd_init_state((x.shape[0],), x.shape[-1], d_state, expand,
+                           head_dim, ngroups, conv_width)
+    y, _ = ssd_prefill_chunk(
+        params, x, state, d_state=d_state, expand=expand, head_dim=head_dim,
+        ngroups=ngroups, conv_width=conv_width, chunk_size=chunk_size)
+    return y
+
+
+def ssd_prefill_chunk(params: dict, x: jnp.ndarray, state: SsmState, *,
+                      d_state: int, expand: int = 2, head_dim: int = 64,
+                      ngroups: int = 1, conv_width: int = 4,
+                      chunk_size: int = 256
+                      ) -> tuple[jnp.ndarray, SsmState]:
+    """Absorb an arbitrary-length prompt chunk into an ``SsmState``.
+
+    x (B, Lc, d_model) -> (y (B, Lc, d_model), new state). Two carries
+    cross the chunk boundary (DESIGN.md §9): the (nh, hd, ds) fp32 scan
+    state, which seeds the chunked scan's recurrence exactly (position t
+    of this chunk reads the prefix state decayed by exp(cum_t), identical
+    to the whole-prompt schedule), and the (W-1, conv_dim) causal-conv
+    tail — the last W-1 pre-conv projections of the prefix, so the first
+    W-1 positions of this chunk see their true left context instead of
+    the zero padding a fresh sequence starts from. The conv runs in the
+    activation dtype over [tail, chunk] (:func:`_causal_conv`); the fp32
+    tail round-trips the activation dtype exactly. Feeding a prompt
+    chunk-by-chunk therefore reproduces :func:`ssd_forward` for any chunk
+    schedule, ragged tails included (the scan zero-pads internally with
+    dt = 0, see :func:`_ssd_chunked`).
+    """
     d_model = x.shape[-1]
     z, xs, b, c, dt, d_inner, nheads = _split_proj(
         params, x, d_model, d_state, expand, head_dim, ngroups)
-    xbc = _causal_conv(params, jnp.concatenate([xs, b, c], -1), conv_width)
+    u = jnp.concatenate([xs, b, c], -1)                 # (B, Lc, conv_dim)
+    B, L = x.shape[0], x.shape[-2]
+    xbc, tail = _causal_conv(params, u, conv_width, tail=state.conv)
     xs, b, c = jnp.split(xbc, [d_inner, d_inner + ngroups * d_state], -1)
 
-    B, L = x.shape[0], x.shape[-2]
     xh = xs.reshape(B, L, nheads, head_dim)
     bh = b.reshape(B, L, ngroups, d_state)
     ch = c.reshape(B, L, ngroups, d_state)
@@ -86,7 +128,8 @@ def ssd_forward(params: dict, x: jnp.ndarray, *, d_state: int,
                          + params["dt_bias"].astype(jnp.float32))  # (B,L,nh)
     a = -jnp.exp(params["a_log"].astype(jnp.float32))              # (nh,)
 
-    y = _ssd_chunked(xh, bh, ch, dt, a, chunk_size)                # (B,L,nh,hd)
+    y, h = _ssd_chunked(xh, bh, ch, dt, a, chunk_size,
+                        init_h=state.h, return_state=True)  # (B,L,nh,hd)
     y = y + params["d_skip"].astype(jnp.float32)[:, None] * xh.astype(
         jnp.float32)
     y = y.reshape(B, L, d_inner).astype(x.dtype)
@@ -96,15 +139,33 @@ def ssd_forward(params: dict, x: jnp.ndarray, *, d_state: int,
     var = jnp.mean(jnp.square(yf), -1, keepdims=True)
     y = (yf * jax.lax.rsqrt(var + 1e-6)
          * (1.0 + params["norm"].astype(jnp.float32))).astype(x.dtype)
-    return y @ params["out_proj"]
+    return y @ params["out_proj"], SsmState(h, tail.astype(jnp.float32))
 
 
-def _ssd_chunked(xh, bh, ch, dt, a, chunk: int):
-    """Chunk-parallel SSD scan. Returns (B, L, nh, hd) fp32."""
+def _ssd_chunked(xh, bh, ch, dt, a, chunk: int, *, init_h=None,
+                 return_state: bool = False):
+    """Chunk-parallel SSD scan. Returns (B, L, nh, hd) fp32 (optionally
+    plus the final (B, nh, hd, ds) carry).
+
+    ``init_h`` seeds the inter-chunk carry (chunked prefill continuation).
+    Ragged L is zero-padded to a chunk multiple inside the kernel-shaped
+    scan: padded steps carry dt = 0, so their log-decay is 0 (the decay
+    factor exp(0) = 1 is the identity) and their dt-weighted score/state
+    contributions vanish exactly — the final carry and every real row's
+    output are untouched, for any L and chunk.
+    """
     B, L, nh, hd = xh.shape
     ng, ds = bh.shape[-2], bh.shape[-1]
     if L % chunk:
-        raise ValueError(f"L={L} not divisible by chunk={chunk}")
+        pad = chunk - L % chunk
+        pad4 = ((0, 0), (0, pad), (0, 0), (0, 0))
+        out = _ssd_chunked(
+            jnp.pad(xh, pad4), jnp.pad(bh, pad4), jnp.pad(ch, pad4),
+            jnp.pad(dt, ((0, 0), (0, pad), (0, 0))), a, chunk,
+            init_h=init_h, return_state=return_state)
+        if return_state:
+            return out[0][:, :L], out[1]
+        return out[:, :L]
     C, T = L // chunk, chunk
     g = nh // ng  # heads per group
 
@@ -141,9 +202,13 @@ def _ssd_chunked(xh, bh, ch, dt, a, chunk: int):
         h = jnp.exp(cum_c[:, -1, :])[..., None, None] * h + dh_
         return h, y
 
-    h0 = jnp.zeros((B, nh, hd, ds), jnp.float32)
-    _, ys = jax.lax.scan(step, h0, (xc, bc, cc, dtc, cum))
-    return jnp.moveaxis(ys, 0, 1).reshape(B, L, nh, hd)
+    h0 = (jnp.zeros((B, nh, hd, ds), jnp.float32) if init_h is None
+          else init_h.astype(jnp.float32))
+    h_fin, ys = jax.lax.scan(step, h0, (xc, bc, cc, dtc, cum))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, L, nh, hd)
+    if return_state:
+        return y, h_fin
+    return y
 
 
 def ssd_init_state(lead_shape, d_model: int, d_state: int, expand: int = 2,

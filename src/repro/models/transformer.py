@@ -576,16 +576,15 @@ def write_slot(cfg: ArchConfig, cache: DecodeCache, src: DecodeCache,
 
 
 def supports_chunked_prefill(cfg: ArchConfig) -> bool:
-    """Chunked prefill continuation is implemented for pure-attention
-    decoders whose backends have an incremental form: every linear kind and
-    softmax (incl. windowed local layers). SSM/hybrid conv+scan carries and
-    the exact quadratic yat kinds fall back to whole-prompt prefill."""
-    if cfg.family in ("ssm", "hybrid", "encdec"):
-        return False
-    if cfg.frontend:
-        return False
-    spec = cfg.attention_spec()
-    return spec.is_linear or spec.kind == "softmax"
+    """Chunked prefill continuation covers every decoder-only config:
+    linear kinds seed the fp32 (S, z) recurrence, softmax and the exact
+    quadratic yat kinds attend ring prefix + masked intra-chunk scores,
+    and ssm/hybrid carry the SSD scan state plus the causal-conv tail
+    across chunk boundaries (``ssm.ssd_prefill_chunk``, DESIGN.md §9).
+    The only remaining gate here is a modality frontend (the vision patch
+    prefix is absorbed whole — bucketed masked-prefill fallback); encdec
+    is gated in ``whisper.supports_chunked_prefill``."""
+    return not cfg.frontend
 
 
 def prefill_chunk(params: dict, cfg: ArchConfig, cache: DecodeCache,
@@ -595,22 +594,47 @@ def prefill_chunk(params: dict, cfg: ArchConfig, cache: DecodeCache,
     tokens (B, Lc); ``cache`` holds the state of the previously absorbed
     prefix (per-slot ``pos``). Returns last-token logits (B, 1, V) and the
     advanced cache — so a prompt fed chunk-by-chunk ends in the same state
-    (exactly for the fp32 linear recurrence; up to fp roundoff for softmax)
-    as a whole-prompt :func:`prefill`, letting the serving engine interleave
-    prefill progress with decode ticks instead of stalling the pool.
+    (exactly for the fp32 linear/SSM recurrences; up to fp roundoff for
+    the quadratic kinds) as a whole-prompt :func:`prefill`, letting the
+    serving engine interleave prefill progress with decode ticks instead
+    of stalling the pool. SSM/hybrid layers carry their (nh, hd, ds) scan
+    state and (W-1, conv_dim) causal-conv tail across chunks
+    (DESIGN.md §9).
     """
     if not supports_chunked_prefill(cfg):
+        # Name the gate that failed: family/kind gates are all cleared for
+        # decoder-only configs, so the only transformer-side gate left is
+        # the modality frontend (whisper raises its own family gate).
         raise NotImplementedError(
-            f"chunked prefill unsupported for {cfg.name} "
-            f"(family={cfg.family}, attn_kind={cfg.attn_kind})")
+            f"chunked prefill unsupported for {cfg.name}: gate "
+            f"frontend={cfg.frontend!r} — the {cfg.frontend} prefix "
+            f"embeddings are absorbed whole, so there is no chunk "
+            f"continuation; serve this config via the bucketed "
+            f"masked-prefill fallback (family={cfg.family!r} and "
+            f"attn_kind={cfg.attn_kind!r} gates are cleared)")
     B, Lc = tokens.shape
     x = embed(params["embed"], tokens).astype(cfg.activation_dtype)
     positions = cache.pos[:, None] + jnp.arange(Lc, dtype=jnp.int32)[None, :]
     slay_params = params.get("slay")
     kinds = jnp.asarray(_layer_kinds(cfg))
 
+    def _ssd_chunk(lp, xn, st):
+        # Clamp the scan tile to the chunk length (exact: the continuation
+        # is chunk-size invariant) so short serving chunks don't zero-pad
+        # up to cfg.chunk_size — mirrors the linear path's clamp.
+        return ssm.ssd_prefill_chunk(
+            lp["ssd"], xn, st, d_state=cfg.ssm_state, expand=cfg.ssm_expand,
+            head_dim=cfg.ssm_head_dim, ngroups=cfg.ssm_ngroups,
+            conv_width=cfg.ssm_conv_width,
+            chunk_size=max(min(cfg.chunk_size, Lc), 1))
+
     def body(x, scanned):
         lp, is_local = scanned["params"], scanned["kind"]
+        new = {}
+        if cfg.family == "ssm":
+            y, st = _ssd_chunk(lp, rmsnorm(lp["pre"], x), scanned["ssm"])
+            new["ssm"] = st
+            return x + y, new
         xa = rmsnorm(lp["pre_attn"], x)
         q = jnp.einsum("bld,dhk->blhk", xa, lp["attn"]["wq"])
         k = jnp.einsum("bld,dhk->blhk", xa, lp["attn"]["wk"])
@@ -637,21 +661,29 @@ def prefill_chunk(params: dict, cfg: ArchConfig, cache: DecodeCache,
         else:
             y, nac = attn.prefill_chunk(spec_g, slay_params, q, k, v, ac)
         a = jnp.einsum("blhk,hkd->bld", y, lp["attn"]["wo"])
+        new["attn"] = nac
+        if cfg.family == "hybrid":
+            m, st = _ssd_chunk(lp, xa, scanned["ssm"])
+            a = 0.5 * (a + m)
+            new["ssm"] = st
         x = x + a
         xm = rmsnorm(lp["pre_mlp"], x)
         if cfg.moe_experts:
             y2, _ = moe(lp["moe"], xm, cfg.moe_experts, cfg.moe_top_k)
         else:
             y2 = mlp(lp["mlp"], xm, cfg.gated_mlp)
-        return x + y2, {"attn": nac}
+        return x + y2, new
 
-    scanned = {"params": params["layers"], "kind": kinds,
-               "attn": cache.attn}
+    scanned = {"params": params["layers"], "kind": kinds}
+    if cache.attn is not None:
+        scanned["attn"] = cache.attn
+    if cache.ssm is not None:
+        scanned["ssm"] = cache.ssm
     x, new = jax.lax.scan(body, x, scanned)
     x = rmsnorm(params["final_norm"], x[:, -1])
     table = params.get("unembed", params["embed"])
     logits = unembed(table, x, cfg.final_logit_softcap)
-    return logits[:, None, :], DecodeCache(new["attn"], None,
+    return logits[:, None, :], DecodeCache(new.get("attn"), new.get("ssm"),
                                            cache.pos + Lc)
 
 
@@ -678,7 +710,7 @@ def _ssd_prefill_state(cfg: ArchConfig, lp: dict, xn: jnp.ndarray):
         lp, xn, d_model, cfg.ssm_state, cfg.ssm_expand, cfg.ssm_head_dim,
         cfg.ssm_ngroups)
     full = jnp.concatenate([xs, b, c], -1)
-    xbc = ssm._causal_conv(lp, full, cfg.ssm_conv_width)
+    xbc, _ = ssm._causal_conv(lp, full, cfg.ssm_conv_width)
     xs, b, c = jnp.split(xbc, [d_inner, d_inner + cfg.ssm_ngroups
                                * cfg.ssm_state], -1)
     B, L = xn.shape[0], xn.shape[1]

@@ -218,7 +218,11 @@ def supports_masked_prefill(cfg: ArchConfig) -> bool:
 
 def prefill_chunk(params: dict, cfg: ArchConfig, cache: WhisperCache,
                   tokens: jnp.ndarray):
-    raise NotImplementedError("chunked prefill unsupported for encdec")
+    raise NotImplementedError(
+        f"chunked prefill unsupported for {cfg.name}: gate "
+        f"family='encdec' — prefill encodes the audio frames whole "
+        f"(cross-attention state has no chunk-by-chunk continuation); "
+        f"serve encdec via whole-prompt prefill")
 
 
 def prefill(params: dict, cfg: ArchConfig, tokens: jnp.ndarray,

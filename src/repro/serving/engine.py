@@ -473,12 +473,14 @@ class ContinuousServingEngine:
     macro-step boundary (the K tradeoff; token streams are K-invariant).
 
     Compile-cache note: the decode hot loop is exactly one jitted
-    macro-step entry. The chunked prefill path compiles once per distinct
-    chunk length (bounded by ``prefill_chunk``); the non-chunkable
-    fallback (exact yat kinds, frontends) compiles once per pow-2 length
-    *bucket* (right-padded, masked exactly via ``true_len``), except for
-    SSM/hybrid/encdec which have no masked form and stay per-length.
-    :meth:`jit_cache_entries` exposes the live counts (CI budgets them).
+    macro-step entry. The chunked prefill path — every decoder-only
+    config: all attention kinds *and* the ssm/hybrid scan-carry families
+    (DESIGN.md §9) — compiles once per distinct chunk length (bounded by
+    ``prefill_chunk``); the non-chunkable fallback (modality frontends)
+    compiles once per pow-2 length *bucket* (right-padded, masked exactly
+    via ``true_len``), except encdec which has no masked form and stays
+    per-length. :meth:`jit_cache_entries` exposes the live counts (CI
+    budgets them).
 
     Sharding (DESIGN.md §8): the slot pool — cache, control vectors, and
     the (K, S) token buffers — shards over the mesh ``data`` axis per
@@ -593,11 +595,26 @@ class ContinuousServingEngine:
     # -- submission ---------------------------------------------------------
 
     def submit(self, req: Request) -> int:
-        """Queue a request; returns its request id."""
-        if len(req.prompt) + req.max_new_tokens > self.serving.max_len:
+        """Queue a request; returns its request id.
+
+        Admission control counts the frontend prefix (vision patch
+        embeddings) against ``max_len``: the KV ring holds prefix + prompt
+        + generated tokens, and an oversized request would silently
+        overwrite live context (the bucketed fallback's padded slice used
+        to drop the prompt tail) — rejected here with the budget spelled
+        out instead."""
+        prefix = (self.cfg.num_patches
+                  if self.cfg.frontend == "vision" else 0)
+        need = prefix + len(req.prompt) + req.max_new_tokens
+        if need > self.serving.max_len:
             raise ValueError(
-                f"prompt+max_new ({len(req.prompt)}+{req.max_new_tokens}) "
-                f"exceeds max_len {self.serving.max_len}")
+                f"request does not fit its decode slot: "
+                + (f"{prefix} vision-prefix patches + " if prefix else "")
+                + f"{len(req.prompt)} prompt + {req.max_new_tokens} "
+                f"max_new = {need} > max_len {self.serving.max_len} "
+                f"(the cache ring would overwrite live context; shorten "
+                f"the prompt/max_new_tokens or raise ServingConfig."
+                f"max_len)")
         rid = self._next_rid
         self._next_rid += 1
         self.sched.submit(rid, req)
@@ -678,7 +695,9 @@ class ContinuousServingEngine:
             # bucket instead of one per distinct prompt length. The cap
             # leaves room for the vision patch prefix: prefix + bucket
             # must fit the KV ring or the ring write would drop real
-            # prefix rows still inside the validity horizon.
+            # prefix rows still inside the validity horizon (submit()
+            # rejects any request whose prefix + prompt + max_new exceeds
+            # max_len, so the cap can never undershoot the prompt here).
             prefix = (self.cfg.num_patches
                       if self.cfg.frontend == "vision" else 0)
             Lb = _bucket_len(len(prompt), self.serving.prefill_bucket_min,

@@ -312,12 +312,14 @@ def test_masked_prefill_matches_unpadded():
 
 @pytest.mark.serving
 def test_bucketed_fallback_parity_and_metrics(setup):
-    """The non-chunkable (exact-yat) fallback serves via pow-2 buckets:
-    token parity with the lockstep oracle, one compile per bucket, and
-    hit/miss counts exposed in the engine metrics."""
+    """The bucketed masked-prefill fallback still serves exactly via pow-2
+    buckets: token parity with the lockstep oracle, one compile per
+    bucket, and hit/miss counts exposed in the engine metrics. Exact-yat
+    kinds chunk by default now (DESIGN.md §9), so the fallback is routed
+    explicitly with prefill_chunk=0."""
     cfg = configs.get_smoke_config("slayformer-124m",
                                    attn_kind="yat_spherical")
-    assert not api.supports_chunked_prefill(cfg)
+    assert api.supports_chunked_prefill(cfg)     # fallback retired for yat
     assert api.supports_masked_prefill(cfg)
     params = api.init_params(cfg, jax.random.PRNGKey(0))
     mesh = setup[2]
@@ -326,7 +328,7 @@ def test_bucketed_fallback_parity_and_metrics(setup):
             for i, p in enumerate(prompts)]
     eng = ContinuousServingEngine(
         cfg, params, mesh,
-        serving=ServingConfig(num_slots=2, max_len=64, prefill_chunk=4,
+        serving=ServingConfig(num_slots=2, max_len=64, prefill_chunk=0,
                               macro_ticks=4))
     outs, summary = eng.run(reqs)
     assert summary["requests_completed"] == 4

@@ -373,7 +373,12 @@ def test_serving_bench_smoke_emits_json(tmp_path, monkeypatch):
     loads = {(r["regime"], r["load"]) for r in rows}
     assert len({ld for _, ld in loads}) >= 2          # >= 2 load levels
     assert {rg for rg, _ in loads} == {"constant_state", "kv_ring",
+                                       "ssm_scan", "hybrid_scan",
                                        "constant_state_sharded"}
+    # Scan-carry families serve via chunked prefill — fallback retired.
+    for r in rows:
+        if r["regime"] in ("ssm_scan", "hybrid_scan"):
+            assert r["bucket_misses"] == 0 == r["bucket_hits"], r
     for r in rows:
         assert "decode_tokens_per_s" in r and "ttft_ticks_p50" in r
         assert "stream_digest" in r
