@@ -5,6 +5,7 @@
     PYTHONPATH=src python -m benchmarks.run --only table2,fig9
     PYTHONPATH=src python -m benchmarks.run --suite kernels   # kernel bench
     PYTHONPATH=src python -m benchmarks.run --suite serving --smoke  # CI
+    PYTHONPATH=src python -m benchmarks.run --suite serving --smoke --chaos
 
 Prints ``name,value,unit`` CSV lines and writes results/benchmarks.json.
 ``--smoke`` runs tiny shapes with 1 rep — CI's per-PR artifact pass; only
@@ -25,6 +26,9 @@ def main(argv=None) -> int:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny shapes, 1 rep (CI artifact pass)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="serving suite: append degraded-mode chaos rows "
+                         "(fault injection, overload) to BENCH_serving.json")
     ap.add_argument("--only", default=None,
                     help="comma-separated module keys (table2,fig2,...)")
     ap.add_argument("--suite", default=None,
@@ -70,10 +74,16 @@ def main(argv=None) -> int:
         t0 = time.monotonic()
         print(f"# --- {key} ({mod.__name__}) ---", flush=True)
         kwargs = {"quick": not args.full}
-        if "smoke" in inspect.signature(mod.run).parameters:
+        sig = inspect.signature(mod.run).parameters
+        if "smoke" in sig:
             kwargs["smoke"] = args.smoke
         elif args.smoke:
             print(f"# {key}: no --smoke support, skipping", flush=True)
+            continue
+        if "chaos" in sig:
+            kwargs["chaos"] = args.chaos
+        elif args.chaos:
+            print(f"# {key}: no --chaos support, skipping", flush=True)
             continue
         try:
             results = mod.run(**kwargs)

@@ -30,11 +30,25 @@ a mesh=(data=N,) slot-sharded pool in a forced-multi-device subprocess
 contract step asserts the sharded digest equals the single-shard one —
 the DESIGN.md §8 byte-identical-stream contract.
 
+``--chaos`` appends degraded-mode rows (DESIGN.md §10): a ``chaos_nan``
+row replays the constant_state trace under a seeded
+:class:`repro.serving.faults.FaultInjector` that NaNs one live slot every
+``chaos_nan_every`` ticks — measuring fault-detection latency (bounded by
+the K-tick fault plane), retry success, and byte-identical parity of
+every successfully-finished stream against the fault-free baseline — and
+a ``chaos_overload`` row drives an all-at-once burst through the
+``shed_oldest`` overload policy with one impossible deadline, measuring
+shed and deadline-miss rates. The CI ``chaos-serving`` step asserts the
+leak contract (``final_occupancy == 0``) and ``fault_retries_succeeded
+>= 1`` from these rows.
+
     PYTHONPATH=src python -m benchmarks.run --suite serving
     PYTHONPATH=src python -m benchmarks.run --suite serving --smoke
+    PYTHONPATH=src python -m benchmarks.run --suite serving --smoke --chaos
 """
 from __future__ import annotations
 
+import dataclasses
 import hashlib
 import json
 import os
@@ -50,6 +64,7 @@ from repro.configs.base import ServingConfig
 from repro.launch.mesh import make_host_mesh
 from repro.models import api
 from repro.serving.engine import ContinuousServingEngine, Request
+from repro.serving.faults import FaultInjector, detection_latencies
 
 _JSON_PATH = os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "BENCH_serving.json")
@@ -58,13 +73,19 @@ _JSON_PATH = os.path.join(os.path.dirname(os.path.dirname(
 # max_new >= 2*macro_ticks so every trace amortizes the K-tick macro-step
 # (the host_syncs_per_token <= 1/K contract CI asserts on).
 _MACRO_TICKS = 8
+# chaos_nan_every: chaos-row NaN-injection cadence (ticks). Full keeps the
+# headline 1-corruption-per-64-ticks rate; smoke/quick shrink it so the
+# shorter traces still see >= 1 fault (the CI chaos contract requires a
+# successful retry, so every tier must actually fault).
 _SMOKE = {"n": 4, "max_new": 16, "prompt": (3, 8), "loads": (0.25, 1.0),
-          "num_slots": 2, "max_len": 32, "prefill_chunk": 4}
+          "num_slots": 2, "max_len": 32, "prefill_chunk": 4,
+          "chaos_nan_every": 6}
 _QUICK = {"n": 10, "max_new": 16, "prompt": (4, 16), "loads": (0.1, 0.5),
-          "num_slots": 4, "max_len": 64, "prefill_chunk": 8}
+          "num_slots": 4, "max_len": 64, "prefill_chunk": 8,
+          "chaos_nan_every": 12}
 _FULL = {"n": 32, "max_new": 24, "prompt": (8, 48),
          "loads": (0.05, 0.2, 0.8), "num_slots": 8, "max_len": 128,
-         "prefill_chunk": 16}
+         "prefill_chunk": 16, "chaos_nan_every": 64}
 
 
 def _poisson_trace(rng, n: int, rate: float, prompt_range, vocab: int,
@@ -167,20 +188,118 @@ def _trace_row(cfg, params, mesh, p: dict, load: float, regime: str,
                  "requests": p["n"],
                  "stream_digest": _stream_digest(outs),
                  "jit_cache_entries": jit_entries, **summary})
+    return outs
 
 
-def run(quick: bool = True, smoke: bool = False):
+def _chaos_rows(cfg, params, mesh, p: dict, load: float, base_outs: dict,
+                results: list, rows: list):
+    """Degraded-mode rows (DESIGN.md §10), both deterministic given the
+    trace + injector seeds, so their rates are trendable per PR.
+
+    ``chaos_nan``: the exact constant_state Poisson trace, with the
+    injector NaN-ing one live slot's device state every
+    ``chaos_nan_every`` ticks. Asserted here (and re-asserted from the
+    JSON by CI): every request terminates, no slot leaks, >= 1 fault is
+    detected, every faulted request finishes ``eos``/``length`` after at
+    most one retry or is terminated as ``fault`` — and every successful
+    stream (retried ones included) is byte-identical to the fault-free
+    baseline, because sampling keyed on (seed, rid, token-index) makes
+    retry-from-scratch transparent.
+
+    ``chaos_overload``: the same requests arriving all at once into a
+    half-sized admission queue under ``shed_oldest``, the last request
+    carrying an impossible 2-tick total deadline, and the injector
+    cancelling a live request periodically — exercising shed, deadline,
+    and cancelled exits in one row.
+    """
+    rng = np.random.default_rng(1234)
+    reqs = _poisson_trace(rng, p["n"], load, p["prompt"],
+                          cfg.vocab_size, p["max_new"])
+    sv = ServingConfig(num_slots=p["num_slots"], max_len=p["max_len"],
+                       prefill_chunk=p["prefill_chunk"],
+                       macro_ticks=_MACRO_TICKS, fault_retries=1)
+    inj = FaultInjector(seed=418, nan_every=p["chaos_nan_every"])
+    eng = ContinuousServingEngine(cfg, params, mesh, serving=sv,
+                                  fault_injector=inj)
+    outs, summary = eng.run(reqs)
+    assert summary["final_occupancy"] == 0, summary
+    assert summary["requests_terminated"] == p["n"], summary
+    assert summary["faults_detected"] >= 1, summary
+    for rid, st in eng.metrics.per_request.items():
+        assert st.finish_reason in ("eos", "length", "fault"), st
+        assert st.retries <= sv.fault_retries, st
+        if st.finish_reason in ("eos", "length"):
+            np.testing.assert_array_equal(outs[rid], base_outs[rid])
+    lat = detection_latencies(inj.log, eng.metrics.fault_events)
+    assert lat, (inj.log, eng.metrics.fault_events)
+    chaos_extra = {
+        "chaos_nan_every": p["chaos_nan_every"],
+        "faults_injected": sum(1 for e in inj.log if e["kind"] == "nan"),
+        "fault_detect_latency_ticks_mean": float(np.mean(lat)),
+        "fault_detect_latency_ticks_max": int(np.max(lat)),
+    }
+    rows.append({"regime": "chaos_nan", "load": load,
+                 "num_slots": p["num_slots"], "requests": p["n"],
+                 "stream_digest": _stream_digest(outs),
+                 "jit_cache_entries": eng.jit_cache_entries(),
+                 **chaos_extra, **summary})
+    for key in ("faults_detected", "fault_retries_succeeded"):
+        results.append(BenchResult(
+            f"serving/chaos_nan/load{load:g}/{key}",
+            float(summary[key]), "count",
+            extra={"regime": "chaos_nan", "load": load}))
+    results.append(BenchResult(
+        f"serving/chaos_nan/load{load:g}/fault_detect_latency_ticks_max",
+        float(chaos_extra["fault_detect_latency_ticks_max"]), "ticks",
+        extra={"regime": "chaos_nan", "load": load}))
+
+    burst = [dataclasses.replace(r, arrival_time=0.0) for r in reqs]
+    burst[-1] = dataclasses.replace(burst[-1], deadline_ticks=2.0)
+    svo = ServingConfig(num_slots=p["num_slots"], max_len=p["max_len"],
+                        prefill_chunk=p["prefill_chunk"],
+                        macro_ticks=_MACRO_TICKS,
+                        max_queue=max(p["n"] // 2, 1),
+                        overload_policy="shed_oldest")
+    inj2 = FaultInjector(seed=419, cancel_every=3 * _MACRO_TICKS)
+    eng2 = ContinuousServingEngine(cfg, params, mesh, serving=svo,
+                                   fault_injector=inj2)
+    for r in burst:
+        eng2.submit(r)
+    outs2, s2 = eng2.run()
+    assert s2["final_occupancy"] == 0, s2
+    assert s2["requests_terminated"] == p["n"], s2
+    assert s2["finish_reasons"].get("shed", 0) >= 1, s2
+    assert s2["finish_reasons"].get("deadline", 0) >= 1, s2
+    rows.append({"regime": "chaos_overload", "load": load,
+                 "num_slots": p["num_slots"], "requests": p["n"],
+                 "max_queue": svo.max_queue,
+                 "stream_digest": _stream_digest(outs2),
+                 "jit_cache_entries": eng2.jit_cache_entries(), **s2})
+    for key in ("shed_rate", "deadline_miss_rate"):
+        results.append(BenchResult(
+            f"serving/chaos_overload/load{load:g}/{key}",
+            float(s2[key]), "ratio",
+            extra={"regime": "chaos_overload", "load": load}))
+
+
+def run(quick: bool = True, smoke: bool = False, chaos: bool = False):
     p = _SMOKE if smoke else (_QUICK if quick else _FULL)
     mesh = make_host_mesh()
     results = []
     rows = []
+    cs_cfg = cs_params = cs_outs = None
     for regime, attn_kind in (("constant_state", "slay"),
                               ("kv_ring", "softmax")):
         cfg = configs.get_smoke_config("slayformer-124m",
                                        attn_kind=attn_kind)
         params = api.init_params(cfg, jax.random.PRNGKey(0))
         for load in p["loads"]:
-            _trace_row(cfg, params, mesh, p, load, regime, results, rows)
+            outs = _trace_row(cfg, params, mesh, p, load, regime,
+                              results, rows)
+            if regime == "constant_state":
+                # Chaos parity baseline: the fault-free streams of the
+                # last constant_state load.
+                cs_cfg, cs_params, cs_outs = cfg, params, outs
 
     # Scan-carry prefill rows (DESIGN.md §9): ssm/hybrid serve through
     # exact chunked-prefill continuation — the bucketed masked-prefill
@@ -214,10 +333,14 @@ def run(quick: bool = True, smoke: bool = False):
         float(sharded["slot_shards"]), "shards",
         extra={"regime": "constant_state_sharded", "load": load}))
 
+    if chaos:
+        _chaos_rows(cs_cfg, cs_params, mesh, p, load, cs_outs,
+                    results, rows)
+
     payload = {
         "meta": {
             "backend": jax.default_backend(),
-            "smoke": smoke, "quick": quick,
+            "smoke": smoke, "quick": quick, "chaos": chaos,
             "params": {**p, "macro_ticks": _MACRO_TICKS},
             "note": ("ttft/occupancy are in engine ticks (backend-"
                      "independent scheduling trajectory); *_per_s are "

@@ -26,8 +26,8 @@ from repro import configs
 from repro.configs.base import ServingConfig
 from repro.launch.mesh import make_host_mesh, make_serving_mesh
 from repro.models import api
-from repro.serving.engine import (ContinuousServingEngine, Request,
-                                  ServingEngine)
+from repro.serving.engine import (AdmissionError, ContinuousServingEngine,
+                                  Request, ServingEngine)
 
 
 def main():
@@ -44,6 +44,12 @@ def main():
     ap.add_argument("--slot-shards", type=int, default=0,
                     help="shard the slot pool N-way over the mesh `data` "
                          "axis (DESIGN.md §8); needs >= N devices")
+    ap.add_argument("--max-queue", type=int, default=0,
+                    help="bound the admission queue (0 = unbounded); with "
+                         "the default reject_new policy, overflow raises a "
+                         "typed AdmissionError this demo catches")
+    ap.add_argument("--overload-policy", default="reject_new",
+                    choices=("reject_new", "shed_oldest", "queue_wait"))
     args = ap.parse_args()
 
     overrides = {"attn_kind": args.attn_kind} if args.attn_kind else {}
@@ -81,9 +87,23 @@ def main():
             cfg, params, mesh,
             serving=ServingConfig(num_slots=args.slots, max_len=256,
                                   prefill_chunk=8, temperature=0.8,
-                                  slot_shards=args.slot_shards))
-        out_map, summary = engine.run(reqs)
-        outs = [out_map[i] for i in range(len(reqs))]
+                                  slot_shards=args.slot_shards,
+                                  max_queue=args.max_queue,
+                                  overload_policy=args.overload_policy))
+        # Typed admission (DESIGN.md §10): a refused request raises an
+        # AdmissionError subclass carrying queue_depth/max_queue, so a
+        # caller can back off or report precisely — no message parsing.
+        admitted = []                      # (rid, request) pairs
+        for r in reqs:
+            try:
+                admitted.append((engine.submit(r), r))
+            except AdmissionError as e:
+                print(f"  refused ({type(e).__name__}, queue "
+                      f"{e.queue_depth}/{e.max_queue}): {e}")
+        out_map, summary = engine.run()
+        outs = [out_map[rid] for rid, _ in admitted]
+        reqs = [r for _, r in admitted]
+        print(f"  finish reasons: {summary['finish_reasons']}")
         # DESIGN §8 walkthrough, step 3 — the contract: rerun this script
         # with/without --slot-shards and diff the token lines below; they
         # are byte-identical (slot_shards in the summary confirms the

@@ -15,6 +15,7 @@ the dry-run's .lower().
 from __future__ import annotations
 
 import dataclasses
+import math
 
 import jax
 import jax.numpy as jnp
@@ -181,6 +182,25 @@ class ServingConfig:
     raises on a mesh whose data axis is not N). Token streams are
     byte-identical across any value — sampling is keyed on
     (seed, rid, token-index), never on slot or shard placement.
+
+    Fault model (DESIGN.md §10): ``overload_policy`` picks what a full
+    admission queue (``max_queue`` > 0) does with new work —
+
+    * ``"reject_new"``: ``Scheduler.submit`` raises
+      :class:`repro.serving.engine.QueueFullError` (typed, carries
+      ``queue_depth``/``max_queue``) and the caller keeps the request;
+    * ``"shed_oldest"``: the longest-waiting queued request is shed
+      (``finish_reason="shed"``) to make room — freshest work wins;
+    * ``"queue_wait"``: admission never rejects, but any request still
+      queued ``queue_wait_ticks`` ticks after its arrival is shed — a
+      queue-wait deadline that bounds staleness instead of depth.
+
+    ``fault_guard`` enables the per-slot NaN/Inf finiteness lane inside
+    the jitted decode macro-step (one extra (K, num_slots) bool plane in
+    the token buffer the host already pulls — no new host syncs); on a
+    detected fault the engine quarantines the slot (``reset_slot``) and
+    re-admits the request up to ``fault_retries`` times before failing it
+    with ``finish_reason="fault"``.
     """
 
     num_slots: int = 4
@@ -194,6 +214,10 @@ class ServingConfig:
     prefill_buckets: bool = True      # pow-2 bucketing of fallback prefill
     prefill_bucket_min: int = 16      # smallest bucket
     slot_shards: int = 0              # data-axis pool shards (0 = auto)
+    overload_policy: str = "reject_new"  # reject_new | shed_oldest | queue_wait
+    queue_wait_ticks: int = 0         # queue_wait policy: max queue age (ticks)
+    fault_guard: bool = True          # NaN/Inf lane in the decode macro-step
+    fault_retries: int = 1            # re-admissions after a slot quarantine
 
     def __post_init__(self):
         if self.num_slots < 1:
@@ -210,6 +234,19 @@ class ServingConfig:
             raise ValueError(
                 f"num_slots ({self.num_slots}) must be divisible by "
                 f"slot_shards ({self.slot_shards})")
+        if not math.isfinite(self.temperature) or self.temperature < 0:
+            raise ValueError(
+                f"temperature must be finite and >= 0 (0 = greedy), got "
+                f"{self.temperature!r}")
+        if self.overload_policy not in ("reject_new", "shed_oldest",
+                                        "queue_wait"):
+            raise ValueError(
+                f"overload_policy must be one of reject_new | shed_oldest "
+                f"| queue_wait, got {self.overload_policy!r}")
+        if self.queue_wait_ticks < 0:
+            raise ValueError("queue_wait_ticks must be >= 0 (0 = no cap)")
+        if self.fault_retries < 0:
+            raise ValueError("fault_retries must be >= 0")
 
 
 @dataclasses.dataclass(frozen=True)

@@ -83,6 +83,27 @@ def write_slot(cfg: ArchConfig, cache, src, slot: int):
     return _mod(cfg).write_slot(cfg, cache, src, slot)
 
 
+def slot_state_finite(cfg: ArchConfig, cache) -> jax.Array:
+    """(B,) bool per-slot finiteness probe over the pooled decode state.
+
+    The quarantine guard's detection surface (DESIGN.md §10): True where
+    every float state leaf of that slot (KV rings, constant-state (S, z),
+    SSM carries, cross-attention summaries) is finite. Reductions are
+    per-slot only — shard-local under a slot-sharded pool, so the §8
+    zero-collective decode contract is preserved when this runs inside
+    the jitted macro-step."""
+    return _mod(cfg).slot_state_finite(cfg, cache)
+
+
+def corrupt_slot(cfg: ArchConfig, cache, slot: int):
+    """Overwrite one slot's float state with NaN (fault injection).
+
+    Chaos-harness primitive (``serving.faults``) — the write mirrors
+    ``reset_slot``'s slot-stable shard-local shape, so injecting a fault
+    never perturbs neighbouring slots' bytes or the pool sharding."""
+    return _mod(cfg).corrupt_slot(cfg, cache, slot)
+
+
 def supports_chunked_prefill(cfg: ArchConfig) -> bool:
     """Whether prefill can be fed chunk-by-chunk with state continuation.
 

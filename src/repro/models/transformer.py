@@ -575,6 +575,42 @@ def write_slot(cfg: ArchConfig, cache: DecodeCache, src: DecodeCache,
     return DecodeCache(wa, ws, cache.pos.at[slot].set(src.pos[0]))
 
 
+def slot_state_finite(cfg: ArchConfig, cache: DecodeCache) -> jnp.ndarray:
+    """(B,) bool — every float decode-state leaf of each slot is finite.
+
+    The NaN/Inf quarantine probe (DESIGN.md §10): reduces each stacked
+    ``(num_layers, B, ...)`` float leaf (KV rings, (S, z) accumulators,
+    SSM scan/conv carries) over every non-slot axis. Integer leaves
+    (positions, ring cursors) cannot be non-finite and are skipped. The
+    reduction is per-slot, so under a slot-sharded pool it partitions
+    into shard-local work — no collectives enter the §8 decode contract.
+    """
+    B = cache.pos.shape[0]
+    ok = jnp.ones((B,), bool)
+    for leaf in jax.tree.leaves((cache.attn, cache.ssm)):
+        if not jnp.issubdtype(leaf.dtype, jnp.floating):
+            continue
+        axes = tuple(i for i in range(leaf.ndim) if i != 1)
+        ok = ok & jnp.all(jnp.isfinite(leaf), axis=axes)
+    return ok
+
+
+def corrupt_slot(cfg: ArchConfig, cache: DecodeCache,
+                 slot: int) -> DecodeCache:
+    """Overwrite one slot's float state with NaN — the chaos harness's
+    fault-injection primitive (``serving.faults``; never on a production
+    path). Mirrors :func:`reset_slot`'s slot-stable, shard-local update
+    shape; integer leaves (positions) are left intact so the fault is a
+    pure numeric corruption, not a bookkeeping one."""
+    def nan_row(x):
+        if not jnp.issubdtype(x.dtype, jnp.floating):
+            return x
+        return x.at[:, slot].set(jnp.nan)
+
+    return DecodeCache(jax.tree.map(nan_row, cache.attn),
+                       jax.tree.map(nan_row, cache.ssm), cache.pos)
+
+
 def supports_chunked_prefill(cfg: ArchConfig) -> bool:
     """Chunked prefill continuation covers every decoder-only config:
     linear kinds seed the fp32 (S, z) recurrence, softmax and the exact

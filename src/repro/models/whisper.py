@@ -205,6 +205,34 @@ def write_slot(cfg: ArchConfig, cache: WhisperCache, src: WhisperCache,
                         cache.pos.at[slot].set(src.pos[0]))
 
 
+def slot_state_finite(cfg: ArchConfig, cache: WhisperCache) -> jnp.ndarray:
+    """(B,) bool — per-slot finiteness over self-attn state and the cached
+    cross-attention summaries; see transformer.slot_state_finite."""
+    B = cache.pos.shape[0]
+    ok = jnp.ones((B,), bool)
+    for leaf in jax.tree.leaves((cache.self_attn, cache.cross_s,
+                                 cache.cross_z)):
+        if not jnp.issubdtype(leaf.dtype, jnp.floating):
+            continue
+        axes = tuple(i for i in range(leaf.ndim) if i != 1)
+        ok = ok & jnp.all(jnp.isfinite(leaf), axis=axes)
+    return ok
+
+
+def corrupt_slot(cfg: ArchConfig, cache: WhisperCache,
+                 slot: int) -> WhisperCache:
+    """NaN one slot's float state (chaos-harness fault injection); see
+    transformer.corrupt_slot."""
+    def nan_row(x):
+        if not jnp.issubdtype(x.dtype, jnp.floating):
+            return x
+        return x.at[:, slot].set(jnp.nan)
+
+    return WhisperCache(jax.tree.map(nan_row, cache.self_attn),
+                        nan_row(cache.cross_s), nan_row(cache.cross_z),
+                        cache.pos)
+
+
 def supports_chunked_prefill(cfg: ArchConfig) -> bool:
     """Encoder-decoder prefill re-encodes audio; no incremental form."""
     return False

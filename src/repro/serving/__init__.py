@@ -1,6 +1,12 @@
 """Serving: lockstep + continuous-batching engines over KV-cache or
-constant-state decode paths."""
-from repro.serving.engine import (ContinuousServingEngine,  # noqa: F401
-                                  EngineMetrics, Request, Scheduler,
+constant-state decode paths, with a typed fault-tolerant request
+lifecycle (deadlines, cancellation, load-shedding, NaN quarantine —
+DESIGN.md §10) and a deterministic chaos harness."""
+from repro.serving.engine import (AdmissionError,  # noqa: F401
+                                  ContinuousServingEngine, EngineMetrics,
+                                  QueueFullError, Request,
+                                  RequestTooLargeError, Scheduler,
                                   ServingEngine, ServingMetrics,
                                   jit_serve_fns)
+from repro.serving.faults import FaultInjector  # noqa: F401
+from repro.serving.sampling import FINISH_REASONS  # noqa: F401

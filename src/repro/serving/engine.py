@@ -22,6 +22,16 @@ copy-out. The KV path rides the same surface with ring-buffer slot resets.
 Cache shardings come from ``sharding.serving_cache_sharding`` and depend
 only on pool shape — never on which slots are live — so admission/eviction
 never reshard (slot-stable contract).
+
+Fault model (DESIGN.md §10): every request terminates with exactly one
+``finish_reason`` from ``sampling.FINISH_REASONS``. Admission failures are
+typed (:class:`AdmissionError` and subclasses) and overload degrades per
+``ServingConfig.overload_policy`` instead of throwing; requests carry
+tick- and wall-clock deadlines and can be cancelled anywhere in their
+lifecycle (queued, mid-prefill, slot-resident, even mid-macro-step); a
+per-slot NaN/Inf lane inside the jitted macro-step detects numeric faults
+and the host replay quarantines + retries them. ``serving.faults`` holds
+the deterministic chaos injector that exercises all of it.
 """
 from __future__ import annotations
 
@@ -77,13 +87,73 @@ def jit_serve_fns(cfg: ArchConfig, mesh, max_len: int,
     return pf, dec
 
 
+class AdmissionError(RuntimeError):
+    """Typed admission failure. ``queue_depth``/``max_queue`` let callers
+    report or back off instead of parsing a message (DESIGN.md §10)."""
+
+    def __init__(self, msg: str, *, queue_depth: int = 0,
+                 max_queue: int = 0):
+        super().__init__(msg)
+        self.queue_depth = queue_depth
+        self.max_queue = max_queue
+
+
+class QueueFullError(AdmissionError):
+    """Admission queue at ``max_queue`` under the ``reject_new`` overload
+    policy. The request was NOT enqueued — the caller keeps it."""
+
+
+class RequestTooLargeError(AdmissionError, ValueError):
+    """prefix + prompt + max_new_tokens exceeds the slot's ``max_len``
+    context ring. Also a ValueError (the pre-§10 type, kept for callers)."""
+
+
 @dataclasses.dataclass
 class Request:
+    """One generation request.
+
+    Deadlines (all optional, checked every tick — DESIGN.md §10): the
+    ``*_ticks`` forms are measured from ``arrival_time`` on the engine's
+    logical clock (backend-independent, what tests/benches use); the
+    ``*_s`` forms are wall-clock from submission. ``ttft_*`` bounds time
+    to the first emitted token only; ``deadline_*`` bounds the whole
+    request. A deadline expiring on the same tick as a natural stop loses
+    — the emission is processed first, so EOS wins. ``on_finish`` fires
+    exactly once per request with its ``finish_reason``
+    (``sampling.FINISH_REASONS``); on a fault retry ``on_token`` replays
+    the stream from index 0 (deterministic sampling regenerates the same
+    prefix when the fault was transient).
+    """
+
     prompt: np.ndarray               # (Lp,) int32
     max_new_tokens: int = 32
     eos_id: int = -1                 # -1: never stop early
     arrival_time: float = 0.0        # engine ticks (continuous engine only)
     on_token: Callable[[int, int], None] | None = None  # (rid, token)
+    ttft_deadline_ticks: float | None = None   # first token by arrival + T
+    deadline_ticks: float | None = None        # finished by arrival + T
+    ttft_deadline_s: float | None = None       # wall-clock equivalents,
+    deadline_s: float | None = None            # measured from submit()
+    on_finish: Callable[[int, str], None] | None = None  # (rid, reason)
+
+    def __post_init__(self):
+        # Fail at construction with an actionable message, not mid-decode
+        # with a shape error or a silent never-terminating slot.
+        if np.asarray(self.prompt).size == 0:
+            raise ValueError("empty prompt: a request must carry at least "
+                             "one prompt token")
+        if self.max_new_tokens < 1:
+            raise ValueError(f"max_new_tokens must be >= 1, got "
+                             f"{self.max_new_tokens}")
+        if not np.isfinite(self.arrival_time) or self.arrival_time < 0:
+            raise ValueError(f"arrival_time must be finite and >= 0, got "
+                             f"{self.arrival_time!r}")
+        for name in ("ttft_deadline_ticks", "deadline_ticks",
+                     "ttft_deadline_s", "deadline_s"):
+            v = getattr(self, name)
+            if v is not None and (not np.isfinite(v) or v <= 0):
+                raise ValueError(f"{name} must be finite and > 0 when "
+                                 f"set, got {v!r}")
 
 
 def _model_batch(cfg: ArchConfig, tokens: jnp.ndarray) -> dict:
@@ -177,7 +247,7 @@ class ServingEngine:
 
 def _macro_decode(params, cache, last_tok, active, rids, gen, eos_ids,
                   max_new, *, cfg: ArchConfig, num_ticks: int,
-                  temperature: float, seed: int):
+                  temperature: float, seed: int, fault_guard: bool = True):
     """K decode ticks as one jitted ``lax.scan`` over the slot pool.
 
     The serving decode hot loop, fully device-resident: per tick the pool
@@ -185,8 +255,19 @@ def _macro_decode(params, cache, last_tok, active, rids, gen, eos_ids,
     passthrough), sampling happens on device keyed per (seed, rid,
     token-index), and a slot that hits EOS or its ``max_new`` budget
     mid-macro-step is masked for the remaining ticks. The host receives
-    only the (K, S) int32 token buffer plus (K, S) emitted flags — one
-    sync per K ticks instead of an (S, vocab) logits pull per token.
+    only the (K, S) int32 token buffer plus (K, S) emitted and fault
+    flags — one sync per K ticks instead of an (S, vocab) logits pull
+    per token.
+
+    Fault lane (DESIGN.md §10, ``fault_guard``): after each tick's
+    ``decode_step`` the per-slot finiteness of the freshly written decode
+    state AND the logits row is checked on device. A non-finite slot does
+    not emit (its sampled token is garbage), is masked from the remaining
+    ticks exactly like an EOS hit, and is flagged in the (K, S) fault
+    plane — which rides the token-buffer pull the host already does, so
+    detection costs zero extra host syncs and ``host_syncs_per_token``
+    stays <= 1/K. Both checks reduce per slot only (shard-local under a
+    slot-sharded pool): no collectives enter the §8 decode contract.
 
     last_tok/active/rids/gen/eos_ids/max_new are (S,) vectors; ``gen``
     counts tokens already emitted per slot (the prefill-sampled first
@@ -197,18 +278,26 @@ def _macro_decode(params, cache, last_tok, active, rids, gen, eos_ids,
         cache, last_tok, active, gen = carry
         logits, cache = api.decode_step(params, cfg, cache,
                                         last_tok[:, None], active)
-        tok = sampling.sample_tokens(logits[:, -1, :], rids, gen,
+        row = logits[:, -1, :]
+        tok = sampling.sample_tokens(row, rids, gen,
                                      temperature=temperature, seed=seed)
-        emitted = active
+        if fault_guard:
+            ok = api.slot_state_finite(cfg, cache) & jnp.all(
+                jnp.isfinite(row.astype(jnp.float32)), axis=-1)
+            faulted = active & jnp.logical_not(ok)
+        else:
+            ok = jnp.ones_like(active)
+            faulted = jnp.zeros_like(active)
+        emitted = active & ok
         tok = jnp.where(emitted, tok, last_tok)
         gen = gen + emitted.astype(jnp.int32)
-        hit = emitted & ((tok == eos_ids) | (gen >= max_new))
-        active = active & jnp.logical_not(hit)
-        return (cache, tok, active, gen), (tok, emitted)
+        hit = emitted & sampling.stop_hit(tok, gen, eos_ids, max_new)
+        active = emitted & jnp.logical_not(hit)
+        return (cache, tok, active, gen), (tok, emitted, faulted)
 
-    (cache, _, _, _), (toks, em) = jax.lax.scan(
+    (cache, _, _, _), (toks, em, flt) = jax.lax.scan(
         tick, (cache, last_tok, active, gen), None, length=num_ticks)
-    return cache, toks, em
+    return cache, toks, em, flt
 
 
 def _bucket_len(n: int, lo: int, cap: int) -> int:
@@ -224,15 +313,20 @@ class RequestStats:
     rid: int
     arrival: float                   # ticks
     prompt_len: int = 0
-    slot: int | None = None          # pool slot served in
+    slot: int | None = None          # pool slot served in (last, if retried)
     admitted: float | None = None    # prefill started
     first_token: float | None = None
     finished: float | None = None
     first_token_wall: float | None = None
     arrival_wall: float | None = None
+    finish_reason: str | None = None  # sampling.FINISH_REASONS; None = live
+    retries: int = 0                 # fault-quarantine re-admissions so far
 
     @property
     def ttft_ticks(self) -> float | None:
+        """Ticks to first token — None until one is emitted (a request
+        cancelled/shed/expired pre-emission has no TTFT, by design: it
+        must drop out of the percentiles rather than read as 0)."""
         if self.first_token is None:
             return None
         return self.first_token - self.arrival
@@ -277,6 +371,20 @@ class ServingMetrics:
     prefill_token_syncs: int = 0  # first-token scalar pulls at admit (count)
     bucket_hits: int = 0        # fallback prefill reusing a bucket (count)
     bucket_misses: int = 0      # first compile of a bucket length (count)
+    # Fault-tolerance counters (DESIGN.md §10). requests_terminated counts
+    # EVERY terminal request (any finish_reason); requests_completed stays
+    # the successful subset (eos | length). finish_reasons is the per-
+    # reason breakdown; fault_events records each quarantine as
+    # {"rid", "slot", "tick"} (the chaos harness joins these against its
+    # injection log to measure detection latency).
+    requests_terminated: int = 0   # requests reaching any terminal state
+    finish_reasons: dict = dataclasses.field(  # reason -> count
+        default_factory=dict)
+    faults_detected: int = 0    # non-finite slots quarantined (count)
+    fault_retries: int = 0      # re-admissions after a quarantine (count)
+    fault_retries_succeeded: int = 0  # retried requests ending eos|length
+    fault_events: list = dataclasses.field(  # per-quarantine records
+        default_factory=list)
     wall_start: float = dataclasses.field(  # engine construction time (wall)
         default_factory=time.perf_counter)
     per_request: dict = dataclasses.field(  # rid -> RequestStats
@@ -318,6 +426,18 @@ class ServingMetrics:
                 self.decode_dispatches / max(self.decode_ticks, 1),
             "bucket_hits": self.bucket_hits,
             "bucket_misses": self.bucket_misses,
+            "requests_terminated": self.requests_terminated,
+            "finish_reasons": dict(self.finish_reasons),
+            # Degraded-mode rates are over terminated requests (0.0 when
+            # nothing terminated yet — never a division by zero, even for
+            # a run whose every request was cancelled before emitting).
+            "shed_rate": self.finish_reasons.get("shed", 0)
+            / max(self.requests_terminated, 1),
+            "deadline_miss_rate": self.finish_reasons.get("deadline", 0)
+            / max(self.requests_terminated, 1),
+            "faults_detected": self.faults_detected,
+            "fault_retries": self.fault_retries,
+            "fault_retries_succeeded": self.fault_retries_succeeded,
             "wall_s": wall,
             "decode_tokens_per_s": self.tokens_generated / wall,
             "total_tokens_per_s":
@@ -392,16 +512,60 @@ class Scheduler:
         """Static owner shard of ``slot`` (GSPMD contiguous-block split)."""
         return slot // self.slots_per_shard
 
-    def submit(self, rid: int, req: Request):
-        if (self.serving.max_queue
-                and len(self.waiting) + len(self.ready)
-                >= self.serving.max_queue):
-            raise RuntimeError("admission queue full")
+    def submit(self, rid: int, req: Request) -> list[tuple[int, "Request"]]:
+        """Enqueue a request; returns the (rid, req) pairs shed to make
+        room (``shed_oldest`` policy — the engine terminates them with
+        ``finish_reason="shed"``).
+
+        Overload behavior when the queue sits at ``max_queue``
+        (DESIGN.md §10): ``reject_new`` raises :class:`QueueFullError`
+        with the depth spelled out (nothing is mutated — the caller keeps
+        the request); ``shed_oldest`` drops the longest-waiting queued
+        request; ``queue_wait`` admits unconditionally and relies on the
+        engine's queue-age sweep to shed stale requests instead."""
+        shed: list[tuple[int, Request]] = []
+        depth = len(self.waiting) + len(self.ready)
+        if self.serving.max_queue and depth >= self.serving.max_queue:
+            policy = self.serving.overload_policy
+            if policy == "reject_new":
+                raise QueueFullError(
+                    f"admission queue full: {depth} queued >= max_queue "
+                    f"{self.serving.max_queue} (overload_policy="
+                    f"'reject_new'; retry later, or configure "
+                    f"'shed_oldest' / 'queue_wait' to degrade instead)",
+                    queue_depth=depth, max_queue=self.serving.max_queue)
+            if policy == "shed_oldest":
+                victim = self.pop_oldest()
+                if victim is not None:
+                    shed.append(victim)
+            # queue_wait: admit; the age sweep sheds laggards by deadline.
         self.waiting.append((rid, req))
         # Keep ordered by (arrival, rid) so a late submission with an
         # earlier arrival_time cannot be head-of-line blocked.
         self.waiting = collections.deque(
             sorted(self.waiting, key=lambda t: (t[1].arrival_time, t[0])))
+        return shed
+
+    def pop_oldest(self) -> tuple[int, Request] | None:
+        """Remove and return the longest-waiting queued request — ready
+        queue first (already arrived, FIFO head is oldest), else the
+        earliest-arriving waiting entry. None if nothing is queued."""
+        if self.ready:
+            return self.ready.popleft()
+        if self.waiting:
+            return self.waiting.popleft()
+        return None
+
+    def cancel(self, rid: int) -> Request | None:
+        """Remove a still-queued request (ready or waiting); returns its
+        Request, or None if ``rid`` is not queued here (it may be in a
+        slot, mid-prefill, or already terminal — the engine checks)."""
+        for q in (self.ready, self.waiting):
+            for item in q:
+                if item[0] == rid:
+                    q.remove(item)
+                    return item[1]
+        return None
 
     def poll_arrivals(self, now: float):
         while self.waiting and self.waiting[0][1].arrival_time <= now:
@@ -494,10 +658,15 @@ class ContinuousServingEngine:
 
     def __init__(self, cfg: ArchConfig, params, mesh, *,
                  serving: ServingConfig = ServingConfig(),
-                 rules: shd.ShardingRules = shd.DEFAULT_RULES):
+                 rules: shd.ShardingRules = shd.DEFAULT_RULES,
+                 fault_injector=None):
         self.cfg, self.params, self.mesh = cfg, params, mesh
         self.serving = serving
         self.rules = rules
+        # Chaos harness hook (serving.faults.FaultInjector) — test/bench
+        # only; None in production. The engine consults it for slot
+        # corruption, injected cancellations, and arrival delays.
+        self._injector = fault_injector
         S, L = serving.num_slots, serving.max_len
         # Resolve the slot-pool sharding once (static for the engine's
         # lifetime): shard the pool over the `data` mesh axis per
@@ -564,9 +733,11 @@ class ContinuousServingEngine:
             functools.partial(_macro_decode, cfg=cfg,
                               num_ticks=serving.macro_ticks,
                               temperature=serving.temperature,
-                              seed=serving.seed),
+                              seed=serving.seed,
+                              fault_guard=serving.fault_guard),
             in_shardings=(p_sh, c_sh) + (v_sh,) * 6,
-            out_shardings=(c_sh, buf_sh, buf_sh), donate_argnums=(1,))
+            out_shardings=(c_sh, buf_sh, buf_sh, buf_sh),
+            donate_argnums=(1,))
         self._sample_fn = jax.jit(
             functools.partial(sampling.sample_tokens,
                               temperature=serving.temperature,
@@ -584,6 +755,13 @@ class ContinuousServingEngine:
             lambda pool, i: api.reset_slot(cfg, pool, i),
             in_shardings=(c_sh, None), out_shardings=c_sh,
             donate_argnums=(0,))
+        # Fault injection (chaos harness only): NaN one slot's float
+        # state. Same slot-stable donated-update shape as reset_slot;
+        # never compiled unless an injector actually fires.
+        self._corrupt_fn = jax.jit(
+            lambda pool, i: api.corrupt_slot(cfg, pool, i),
+            in_shardings=(c_sh, None), out_shardings=c_sh,
+            donate_argnums=(0,))
         self._chunk_fn = jax.jit(
             lambda p, c, t: api.prefill_chunk(cfg, p, c, t),
             donate_argnums=(1,))
@@ -597,32 +775,45 @@ class ContinuousServingEngine:
     def submit(self, req: Request) -> int:
         """Queue a request; returns its request id.
 
-        Admission control counts the frontend prefix (vision patch
-        embeddings) against ``max_len``: the KV ring holds prefix + prompt
-        + generated tokens, and an oversized request would silently
-        overwrite live context (the bucketed fallback's padded slice used
-        to drop the prompt tail) — rejected here with the budget spelled
-        out instead."""
+        Raises typed :class:`AdmissionError` subclasses
+        (DESIGN.md §10): :class:`RequestTooLargeError` when prefix +
+        prompt + max_new overflows the slot ring (the KV ring would
+        silently overwrite live context otherwise), and
+        :class:`QueueFullError` when the queue is at ``max_queue`` under
+        the ``reject_new`` overload policy. Under ``shed_oldest`` the
+        longest-waiting queued request is terminated with
+        ``finish_reason="shed"`` instead; under ``queue_wait`` admission
+        always succeeds and staleness is bounded by the queue-age sweep.
+        A rejected request is never enqueued and consumes no rid."""
+        if self._injector is not None:
+            delay = self._injector.arrival_delay_for()
+            if delay:
+                req = dataclasses.replace(
+                    req, arrival_time=req.arrival_time + delay)
         prefix = (self.cfg.num_patches
                   if self.cfg.frontend == "vision" else 0)
         need = prefix + len(req.prompt) + req.max_new_tokens
         if need > self.serving.max_len:
-            raise ValueError(
+            raise RequestTooLargeError(
                 f"request does not fit its decode slot: "
                 + (f"{prefix} vision-prefix patches + " if prefix else "")
                 + f"{len(req.prompt)} prompt + {req.max_new_tokens} "
                 f"max_new = {need} > max_len {self.serving.max_len} "
                 f"(the cache ring would overwrite live context; shorten "
                 f"the prompt/max_new_tokens or raise ServingConfig."
-                f"max_len)")
+                f"max_len)",
+                queue_depth=self.sched.queue_depth,
+                max_queue=self.serving.max_queue)
         rid = self._next_rid
+        shed = self.sched.submit(rid, req)   # may raise QueueFullError
         self._next_rid += 1
-        self.sched.submit(rid, req)
         st = RequestStats(rid=rid, arrival=req.arrival_time,
                           prompt_len=len(req.prompt))
         st.arrival_wall = time.perf_counter()
         self.metrics.per_request[rid] = st
         self._outputs[rid] = []
+        for srid, sreq in shed:
+            self._terminate(srid, sreq, "shed")
         return rid
 
     # -- engine ticks -------------------------------------------------------
@@ -630,11 +821,21 @@ class ContinuousServingEngine:
     def step(self) -> bool:
         """One scheduling decision: a prefill chunk (one tick) or a decode
         macro-step (K ticks, replayed per tick). Returns False when fully
-        idle."""
+        idle.
+
+        Tick anatomy (DESIGN.md §10): arrivals poll, then the lifecycle
+        sweep (deadline expiry + queue-age shedding), then chaos
+        injections if an injector is attached, then the scheduling
+        decision proper. The sweep also runs after every replayed decode
+        tick, so deadlines are enforced at per-tick granularity even
+        under K-tick macro-stepping."""
         sched = self.sched
         sched.poll_arrivals(self.tick)
         did = False
         with self.mesh:
+            self._lifecycle_sweep()
+            if self._injector is not None:
+                self._apply_injections()
             if sched.want_prefill(self._prefill is not None):
                 self.metrics.sample(sched.queue_depth, sched.occupancy)
                 self._prefill_tick()
@@ -666,7 +867,14 @@ class ContinuousServingEngine:
             self.step()
         outs = {rid: np.asarray(toks, np.int32)
                 for rid, toks in self._outputs.items()}
-        return outs, self.metrics.summary()
+        summary = self.metrics.summary()
+        # Leak contract (CI asserts these on every bench row): a drained
+        # engine holds zero live slots and an empty queue — every
+        # admission path, including quarantine retries, cancels, and
+        # deadline evictions, returned its slot to the pool.
+        summary["final_occupancy"] = self.sched.occupancy
+        summary["final_queue_depth"] = self.sched.queue_depth
+        return outs, summary
 
     # -- internals ----------------------------------------------------------
 
@@ -740,26 +948,33 @@ class ContinuousServingEngine:
         self._maxn[pf.slot] = req.max_new_tokens
         self._emit(slot_rec, tok0)
         if tok0 == req.eos_id or req.max_new_tokens <= 1:
-            self._finish(pf.slot)
+            self._finish(pf.slot,
+                         sampling.finish_reason_of(tok0, req.eos_id))
 
     def _decode_macro(self):
         """One decode dispatch = K device ticks for the whole pool; replay
         the token buffer on host at per-tick granularity so streaming
         callbacks, TTFT/queue-depth samples, and eviction stay exact."""
-        self.pool, toks, em = self._macro_fn(
+        self.pool, toks, em, flt = self._macro_fn(
             self.params, self.pool, jnp.asarray(self._last_tok),
             jnp.asarray(self._active), jnp.asarray(self._rids),
             jnp.asarray(self._gen), jnp.asarray(self._eos),
             jnp.asarray(self._maxn))
         self.metrics.decode_dispatches += 1
-        toks, em = np.asarray(toks), np.asarray(em)  # ONE host sync per K
+        toks, em, flt = (np.asarray(toks), np.asarray(em),
+                         np.asarray(flt))  # ONE host sync per K ticks
         self.metrics.host_syncs += 1
         for t in range(toks.shape[0]):
-            if not em[t].any():
+            if not (em[t].any() or flt[t].any()):
                 break   # every slot drained mid-macro-step; suffix unused
             self.sched.poll_arrivals(self.tick)
             self.metrics.sample(self.sched.queue_depth,
                                 self.sched.occupancy)
+            # Quarantine before emission: a faulted slot never emitted at
+            # this tick (its sampled token is garbage by definition).
+            for slot in np.nonzero(flt[t])[0]:
+                if int(slot) in self.sched.active:
+                    self._quarantine(int(slot))
             for slot in list(self.sched.active):
                 if not em[t, slot]:
                     continue
@@ -771,11 +986,16 @@ class ContinuousServingEngine:
                 self._emit(rec, tk)
                 if (tk == rec.req.eos_id
                         or len(rec.tokens) >= rec.req.max_new_tokens):
-                    self._finish(slot)
+                    self._finish(slot, sampling.finish_reason_of(
+                        tk, rec.req.eos_id))
             self.sched.note_decode()
             self.metrics.decode_ticks += 1
             self.tick += 1
             self.metrics.ticks = self.tick
+            # Sweep *after* the tick's emissions: EOS beats a deadline
+            # expiring on the same tick; an on_token cancel has already
+            # removed its slot from residency by the time we get here.
+            self._lifecycle_sweep()
 
     def jit_cache_entries(self) -> dict:
         """Live jit-cache entry counts per engine entry point — the
@@ -788,7 +1008,8 @@ class ContinuousServingEngine:
         as "unmeasurable", not as a budget violation)."""
         fns = {"macro_decode": self._macro_fn, "sample": self._sample_fn,
                "write": self._write_fn, "reset": self._reset_fn,
-               "chunk": self._chunk_fn, "prefill": self._prefill_fn,
+               "corrupt": self._corrupt_fn, "chunk": self._chunk_fn,
+               "prefill": self._prefill_fn,
                "prefill_masked": self._prefill_masked_fn}
         out = {}
         for name, fn in fns.items():
@@ -824,13 +1045,166 @@ class ContinuousServingEngine:
         if rec.req.on_token is not None:
             rec.req.on_token(rec.rid, tok)
 
-    def _finish(self, slot: int):
+    def _finish(self, slot: int, reason: str):
+        """Evict a slot-resident request into terminal state ``reason``."""
         rec = self.sched.active[slot]
-        st = self.metrics.per_request[rec.rid]
-        st.finished = self.tick
-        self.metrics.requests_completed += 1
         self._active[slot] = False
         # Eviction = one slot overwrite (constant-state asymmetry: O(m·dv)
         # zeros for SLAY vs an O(max_len) ring zero for KV backends).
         self.pool = self._reset_fn(self.pool, jnp.int32(slot))
         self.sched.evict(slot)
+        self._terminate(rec.rid, rec.req, reason)
+
+    def _terminate(self, rid: int, req: Request, reason: str):
+        """Stamp the single terminal state of a request — every exit path
+        (natural stop, deadline, cancel, shed, fault) funnels here, so
+        ``on_finish`` fires exactly once and the finish-reason breakdown
+        always sums to ``requests_terminated``."""
+        st = self.metrics.per_request[rid]
+        st.finished = self.tick
+        st.finish_reason = reason
+        m = self.metrics
+        m.requests_terminated += 1
+        m.finish_reasons[reason] = m.finish_reasons.get(reason, 0) + 1
+        if reason in ("eos", "length"):
+            m.requests_completed += 1
+            if st.retries:
+                m.fault_retries_succeeded += 1
+        if req.on_finish is not None:
+            req.on_finish(rid, reason)
+
+    def _quarantine(self, slot: int):
+        """Non-finite decode state detected in ``slot`` (DESIGN.md §10):
+        reset the slot and either re-admit the request *from scratch* at
+        the head of the ready queue — deterministic (seed, rid, idx)
+        sampling regenerates the identical stream prefix when the fault
+        was transient, so a successful retry is indistinguishable from a
+        fault-free run — or, with ``serving.fault_retries`` exhausted,
+        terminate it with ``finish_reason="fault"``. The possibly-tainted
+        emitted prefix is dropped either way."""
+        rec = self.sched.active[slot]
+        st = self.metrics.per_request[rec.rid]
+        m = self.metrics
+        m.faults_detected += 1
+        m.fault_events.append({"rid": rec.rid, "slot": slot,
+                               "tick": self.tick})
+        self._active[slot] = False
+        self.pool = self._reset_fn(self.pool, jnp.int32(slot))
+        self.sched.evict(slot)
+        if st.retries < self.serving.fault_retries:
+            st.retries += 1
+            m.fault_retries += 1
+            self._outputs[rec.rid] = []
+            st.first_token = None
+            st.first_token_wall = None
+            # Head of the ready queue: the request already waited its
+            # turn once; retry latency is one admission, not a requeue.
+            self.sched.ready.appendleft((rec.rid, rec.req))
+        else:
+            self._terminate(rec.rid, rec.req, "fault")
+
+    # -- lifecycle: cancellation, deadlines, queue-age shedding -------------
+
+    def cancel(self, rid: int) -> bool:
+        """Cancel a request anywhere in its lifecycle: still queued,
+        mid-chunked-prefill, or slot-resident (including mid-macro-step —
+        the replay loop re-checks slot residency per buffered tick, so a
+        cancelled slot's remaining device ticks are dropped on the floor).
+        Returns True if the request was live and is now terminated with
+        ``finish_reason="cancelled"``; False if ``rid`` is unknown or
+        already terminal (idempotent — ``on_finish`` never fires twice)."""
+        st = self.metrics.per_request.get(rid)
+        if st is None or st.finish_reason is not None:
+            return False
+        req = self.sched.cancel(rid)
+        if req is not None:                  # still queued
+            self._terminate(rid, req, "cancelled")
+            return True
+        pf = self._prefill
+        if pf is not None and pf.rid == rid:  # admission in flight
+            self._prefill = None
+            self.sched.free.append(pf.slot)
+            self.sched.free.sort()
+            self._terminate(rid, pf.req, "cancelled")
+            return True
+        for slot, rec in self.sched.active.items():
+            if rec.rid == rid:               # slot-resident
+                with self.mesh:
+                    self._finish(slot, "cancelled")
+                return True
+        return False                         # pragma: no cover — unreachable
+
+    def _lifecycle_sweep(self):
+        """Deadline expiry plus ``queue_wait`` age shedding, applied to
+        every live request (queued, mid-prefill, slot-resident).
+
+        Runs at the top of each engine tick and again after every
+        *replayed* tick of a decode macro-step, so deadlines hold at
+        per-tick granularity even with K > 1. Expiry is strict
+        (``now - arrival > deadline``) and the decode replay processes a
+        tick's emissions before sweeping it, so a natural stop landing on
+        the deadline tick finishes ``eos``/``length`` — EOS wins.
+        TTFT deadlines only bind while no token has been emitted yet."""
+        now = self.tick
+        wall = time.perf_counter()
+
+        def expired(req: Request, st: RequestStats) -> bool:
+            age = now - req.arrival_time
+            wage = (wall - st.arrival_wall
+                    if st.arrival_wall is not None else 0.0)
+            if st.first_token is None:
+                if (req.ttft_deadline_ticks is not None
+                        and age > req.ttft_deadline_ticks):
+                    return True
+                if (req.ttft_deadline_s is not None
+                        and wage > req.ttft_deadline_s):
+                    return True
+            if req.deadline_ticks is not None and age > req.deadline_ticks:
+                return True
+            if req.deadline_s is not None and wage > req.deadline_s:
+                return True
+            return False
+
+        sched = self.sched
+        per = self.metrics.per_request
+        for q in (sched.ready, sched.waiting):
+            for item in list(q):
+                rid, req = item
+                if expired(req, per[rid]):
+                    q.remove(item)
+                    self._terminate(rid, req, "deadline")
+        if (self.serving.overload_policy == "queue_wait"
+                and self.serving.queue_wait_ticks):
+            # queue_wait admits unconditionally at submit; staleness is
+            # bounded here instead — queued longer than the budget = shed.
+            W = self.serving.queue_wait_ticks
+            for q in (sched.ready, sched.waiting):
+                for item in list(q):
+                    rid, req = item
+                    if now - req.arrival_time > W:
+                        q.remove(item)
+                        self._terminate(rid, req, "shed")
+        pf = self._prefill
+        if pf is not None and expired(pf.req, per[pf.rid]):
+            self._prefill = None
+            sched.free.append(pf.slot)
+            sched.free.sort()
+            self._terminate(pf.rid, pf.req, "deadline")
+        for slot, rec in list(sched.active.items()):
+            if expired(rec.req, per[rec.rid]):
+                self._finish(slot, "deadline")
+
+    def _apply_injections(self):
+        """Consult the chaos injector (test/bench only): injected
+        cancellations hit the public :meth:`cancel` path; slot corruption
+        NaNs a live slot's float state on device — detection is then the
+        macro-step fault lane's job, exactly as for an organic fault."""
+        inj = self._injector
+        live_rids = ([rec.rid for rec in self.sched.active.values()]
+                     + [rid for rid, _ in self.sched.ready])
+        for rid in inj.cancel_rids(self.tick, live_rids):
+            self.cancel(rid)
+        for slot in inj.corrupt_slots(self.tick,
+                                      list(self.sched.active)):
+            if slot in self.sched.active:
+                self.pool = self._corrupt_fn(self.pool, jnp.int32(slot))

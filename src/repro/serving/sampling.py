@@ -29,6 +29,38 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+# Finish-reason taxonomy (DESIGN.md §10). Every request terminates with
+# exactly one of these, stamped on its RequestStats, passed to its
+# ``on_finish`` callback, and counted in ``ServingMetrics.summary()``:
+#
+#   eos        sampled the request's eos_id (natural stop)
+#   length     hit the max_new_tokens budget
+#   deadline   missed its ttft/total deadline (ticks or wall-clock)
+#   cancelled  explicitly cancelled via ContinuousServingEngine.cancel
+#   shed       dropped by the overload policy (queue full / queue-wait)
+#   fault      non-finite slot state detected and retries exhausted
+#
+# eos/length are the *successful* reasons (requests_completed counts
+# them); the other four are degraded-mode exits.
+FINISH_REASONS = ("eos", "length", "deadline", "cancelled", "shed", "fault")
+
+
+def stop_hit(tok, gen, eos_id, max_new):
+    """Natural-stop predicate: did the just-emitted token end the request?
+
+    One logic, two call sites: elementwise on the (S,) device lanes inside
+    the jitted macro-step, and on python/numpy scalars in the host replay
+    — so device masking and host eviction can never disagree. ``gen``
+    counts tokens emitted *including* ``tok``.
+    """
+    return (tok == eos_id) | (gen >= max_new)
+
+
+def finish_reason_of(tok: int, eos_id: int) -> str:
+    """Reason for a natural stop: ``eos`` wins over ``length`` when the
+    budget-exhausting token is also the eos id."""
+    return "eos" if tok == eos_id else "length"
+
 
 def _gumbel_row(seed: int, rid, idx, vocab: int) -> jnp.ndarray:
     """Gumbel(0,1) row keyed on (seed, rid, idx); fp32, (vocab,)."""

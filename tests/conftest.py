@@ -24,3 +24,7 @@ def pytest_configure(config):
     config.addinivalue_line(
         "markers",
         "serving: continuous-batching serving tests (pytest -m serving)")
+    config.addinivalue_line(
+        "markers",
+        "chaos: fault-injection / degraded-mode serving tests "
+        "(pytest -m chaos)")
