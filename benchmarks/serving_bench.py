@@ -30,6 +30,18 @@ a mesh=(data=N,) slot-sharded pool in a forced-multi-device subprocess
 contract step asserts the sharded digest equals the single-shard one —
 the DESIGN.md §8 byte-identical-stream contract.
 
+Three DESIGN.md §11 rows ride every run: ``kv_ring_paged`` replays the
+kv_ring trace with the page-table layer on (its ``stream_digest`` must
+equal the unpaged row's; ``pages_peak`` / ``final_pages_in_use`` expose
+pool pressure and the no-leak contract), and a ``prefix_cold`` /
+``prefix_cached`` pair replays a shared-system-prefix trace cold and then
+against a cache warmed by a throwaway engine — the cached row must
+full-hit every request (``prefix_hit_rate == 1.0``), stream
+byte-identically, and beat the cold row's ``ttft_ticks_p50``. The tick
+metrics of every non-chaos row are additionally gated against the
+committed baseline by ``tools/check_bench.py`` (re-baseline deliberate
+shifts with ``--update``).
+
 ``--chaos`` appends degraded-mode rows (DESIGN.md §10): a ``chaos_nan``
 row replays the constant_state trace under a seeded
 :class:`repro.serving.faults.FaultInjector` that NaNs one live slot every
@@ -65,6 +77,7 @@ from repro.launch.mesh import make_host_mesh
 from repro.models import api
 from repro.serving.engine import ContinuousServingEngine, Request
 from repro.serving.faults import FaultInjector, detection_latencies
+from repro.serving.prefix_cache import PrefixCache
 
 _JSON_PATH = os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "BENCH_serving.json")
@@ -79,13 +92,13 @@ _MACRO_TICKS = 8
 # successful retry, so every tier must actually fault).
 _SMOKE = {"n": 4, "max_new": 16, "prompt": (3, 8), "loads": (0.25, 1.0),
           "num_slots": 2, "max_len": 32, "prefill_chunk": 4,
-          "chaos_nan_every": 6}
+          "page_size": 8, "chaos_nan_every": 6}
 _QUICK = {"n": 10, "max_new": 16, "prompt": (4, 16), "loads": (0.1, 0.5),
           "num_slots": 4, "max_len": 64, "prefill_chunk": 8,
-          "chaos_nan_every": 12}
+          "page_size": 16, "chaos_nan_every": 12}
 _FULL = {"n": 32, "max_new": 24, "prompt": (8, 48),
          "loads": (0.05, 0.2, 0.8), "num_slots": 8, "max_len": 128,
-         "prefill_chunk": 16, "chaos_nan_every": 64}
+         "prefill_chunk": 16, "page_size": 16, "chaos_nan_every": 64}
 
 
 def _poisson_trace(rng, n: int, rate: float, prompt_range, vocab: int,
@@ -100,6 +113,23 @@ def _poisson_trace(rng, n: int, rate: float, prompt_range, vocab: int,
         prompt = rng.integers(3, vocab, size=plen).astype(np.int32)
         reqs.append(Request(prompt, max_new_tokens=max_new,
                             arrival_time=t))
+    return reqs
+
+
+def _prefix_trace(rng, n: int, rate: float, chunk: int, vocab: int,
+                  max_new: int) -> list[Request]:
+    """Repeated-system-prompt trace (DESIGN.md §11): every prompt is one
+    shared 2-chunk system prefix plus a short unique suffix — the shape
+    the content-addressed prefix cache is built for."""
+    sysp = rng.integers(3, vocab, size=2 * chunk).astype(np.int32)
+    t = 0.0
+    reqs = []
+    for _ in range(n):
+        t += rng.exponential(1.0 / rate)
+        s = int(rng.integers(1, chunk + 1))
+        suffix = rng.integers(3, vocab, size=s).astype(np.int32)
+        reqs.append(Request(np.concatenate([sysp, suffix]),
+                            max_new_tokens=max_new, arrival_time=t))
     return reqs
 
 
@@ -150,18 +180,26 @@ def _sharded_row(p: dict, load: float) -> dict:
 
 
 def _trace_row(cfg, params, mesh, p: dict, load: float, regime: str,
-               results: list, rows: list):
+               results: list, rows: list, *, page_size: int = 0,
+               prefix_cache=None, reqs=None):
     """Run one (config, load) Poisson trace; append BenchResults + a JSON
-    row, asserting the backend-independent hot-loop contract."""
-    rng = np.random.default_rng(1234)
-    reqs = _poisson_trace(rng, p["n"], load, p["prompt"],
-                          cfg.vocab_size, p["max_new"])
+    row, asserting the backend-independent hot-loop contract.
+
+    ``page_size`` pages the slot pool (``*_paged``/``prefix_*`` rows);
+    ``prefix_cache`` shares a pre-warmed PrefixCache (``prefix_cached``
+    row); ``reqs`` overrides the default Poisson trace."""
+    if reqs is None:
+        rng = np.random.default_rng(1234)
+        reqs = _poisson_trace(rng, p["n"], load, p["prompt"],
+                              cfg.vocab_size, p["max_new"])
     eng = ContinuousServingEngine(
         cfg, params, mesh,
         serving=ServingConfig(num_slots=p["num_slots"],
                               max_len=p["max_len"],
                               prefill_chunk=p["prefill_chunk"],
-                              macro_ticks=_MACRO_TICKS))
+                              macro_ticks=_MACRO_TICKS,
+                              page_size=page_size),
+        prefix_cache=prefix_cache)
     outs, summary = eng.run(reqs)
     assert summary["requests_completed"] == p["n"]
     # Hot-loop contract (backend-independent): one pooled dispatch
@@ -186,6 +224,7 @@ def _trace_row(cfg, params, mesh, p: dict, load: float, regime: str,
     rows.append({"regime": regime, "load": load,
                  "num_slots": p["num_slots"],
                  "requests": p["n"],
+                 "prefix_hit_rate": summary["prefix_hits"] / p["n"],
                  "stream_digest": _stream_digest(outs),
                  "jit_cache_entries": jit_entries, **summary})
     return outs
@@ -288,6 +327,7 @@ def run(quick: bool = True, smoke: bool = False, chaos: bool = False):
     results = []
     rows = []
     cs_cfg = cs_params = cs_outs = None
+    kv_cfg = kv_params = None
     for regime, attn_kind in (("constant_state", "slay"),
                               ("kv_ring", "softmax")):
         cfg = configs.get_smoke_config("slayformer-124m",
@@ -300,6 +340,67 @@ def run(quick: bool = True, smoke: bool = False, chaos: bool = False):
                 # Chaos parity baseline: the fault-free streams of the
                 # last constant_state load.
                 cs_cfg, cs_params, cs_outs = cfg, params, outs
+            else:
+                kv_cfg, kv_params = cfg, params
+
+    # Paged-pool row (DESIGN.md §11): the exact kv_ring trace with the KV
+    # rings drawn from a shared page pool. Streams must be byte-identical
+    # to the unpaged row — paging is a memory-layout change, never a
+    # numerics change — and a drained engine leaks zero pages.
+    load = p["loads"][-1]
+    _trace_row(kv_cfg, kv_params, mesh, p, load, "kv_ring_paged",
+               results, rows, page_size=p["page_size"])
+    paged_row = rows[-1]
+    kv_row = next(r for r in rows if r["regime"] == "kv_ring"
+                  and r["load"] == load)
+    assert paged_row["stream_digest"] == kv_row["stream_digest"], \
+        (paged_row["stream_digest"], kv_row["stream_digest"])
+    assert paged_row["final_pages_in_use"] == 0, paged_row
+    assert paged_row["pages_peak"] >= 1, paged_row
+
+    # Prefix-cache rows (DESIGN.md §11): a repeated-system-prompt trace,
+    # cold (no cache) vs cached (a warm-up engine populates a shared
+    # PrefixCache; the measured engine then hits on every admission).
+    # Streams must be byte-identical cold-vs-cached — seeding from a
+    # snapshot preserves the suffix chunk schedule and sampling is keyed
+    # (seed, rid, idx) — while cached TTFT drops (prefill work skipped).
+    def prefix_reqs():
+        return _prefix_trace(np.random.default_rng(99), p["n"], load,
+                             p["prefill_chunk"], kv_cfg.vocab_size,
+                             p["max_new"])
+
+    _trace_row(kv_cfg, kv_params, mesh, p, load, "prefix_cold",
+               results, rows, page_size=p["page_size"],
+               reqs=prefix_reqs())
+    cold_row = rows[-1]
+    shared = PrefixCache(64 * 1024 * 1024)
+    warm = ContinuousServingEngine(
+        kv_cfg, kv_params, mesh,
+        serving=ServingConfig(num_slots=p["num_slots"],
+                              max_len=p["max_len"],
+                              prefill_chunk=p["prefill_chunk"],
+                              macro_ticks=_MACRO_TICKS,
+                              page_size=p["page_size"]),
+        prefix_cache=shared)
+    warm.run(prefix_reqs())
+    _trace_row(kv_cfg, kv_params, mesh, p, load, "prefix_cached",
+               results, rows, page_size=p["page_size"],
+               prefix_cache=shared, reqs=prefix_reqs())
+    cached_row = rows[-1]
+    assert cached_row["stream_digest"] == cold_row["stream_digest"], \
+        (cached_row["stream_digest"], cold_row["stream_digest"])
+    assert cached_row["prefix_hit_rate"] == 1.0, cached_row
+    assert cold_row["prefix_hit_rate"] == 0.0, cold_row
+    assert cached_row["ttft_ticks_p50"] < cold_row["ttft_ticks_p50"], \
+        (cached_row["ttft_ticks_p50"], cold_row["ttft_ticks_p50"])
+    for r in (cold_row, cached_row):
+        assert r["final_pages_in_use"] == 0, r
+    for key, row in (("prefix_hit_rate", cached_row),
+                     ("prefix_tokens_reused", cached_row)):
+        results.append(BenchResult(
+            f"serving/prefix_cached/load{load:g}/{key}",
+            float(row[key]), "ratio" if "rate" in key else "tokens",
+            extra={"regime": "prefix_cached", "load": load}))
 
     # Scan-carry prefill rows (DESIGN.md §9): ssm/hybrid serve through
     # exact chunked-prefill continuation — the bucketed masked-prefill

@@ -15,6 +15,14 @@ first (jax pins its device count at first init):
 The token streams printed are byte-identical to the unsharded run: the
 sampler is keyed on (seed, rid, token-index), never on slot or shard
 placement.
+
+Paged slot memory + prefix cache (DESIGN.md §11) — page the KV rings so
+short requests pin only the pages they need, and reuse shared prompt
+prefixes across requests by state-snapshot copy; both preserve stream
+byte-identity:
+
+    PYTHONPATH=src python examples/serve.py --attn-kind softmax \\
+        --page-size 16 --prefix-cache 64
 """
 import argparse
 import time
@@ -28,6 +36,7 @@ from repro.launch.mesh import make_host_mesh, make_serving_mesh
 from repro.models import api
 from repro.serving.engine import (AdmissionError, ContinuousServingEngine,
                                   Request, ServingEngine)
+from repro.serving.prefix_cache import PrefixCache
 
 
 def main():
@@ -50,6 +59,15 @@ def main():
                          "typed AdmissionError this demo catches")
     ap.add_argument("--overload-policy", default="reject_new",
                     choices=("reject_new", "shed_oldest", "queue_wait"))
+    ap.add_argument("--page-size", type=int, default=0,
+                    help="page the pooled KV rings into fixed-size pages "
+                         "(DESIGN.md §11); 0 = unpaged. Ignored for "
+                         "constant-state kinds (nothing to page)")
+    ap.add_argument("--prefix-cache", type=int, default=0, metavar="MB",
+                    help="content-addressed prompt-prefix cache budget in "
+                         "MB (DESIGN.md §11); 0 = off. Repeated/shared "
+                         "prompt prefixes seed their slot from a stored "
+                         "snapshot instead of re-prefilling")
     args = ap.parse_args()
 
     overrides = {"attn_kind": args.attn_kind} if args.attn_kind else {}
@@ -83,13 +101,16 @@ def main():
         # shard-local slot overwrite; the K-tick decode scan runs with
         # zero cross-shard collectives (engine.decode_hlo() shows the
         # compiled proof).
+        pc = (PrefixCache(args.prefix_cache * 1024 * 1024)
+              if args.prefix_cache else None)
         engine = ContinuousServingEngine(
-            cfg, params, mesh,
+            cfg, params, mesh, prefix_cache=pc,
             serving=ServingConfig(num_slots=args.slots, max_len=256,
                                   prefill_chunk=8, temperature=0.8,
                                   slot_shards=args.slot_shards,
                                   max_queue=args.max_queue,
-                                  overload_policy=args.overload_policy))
+                                  overload_policy=args.overload_policy,
+                                  page_size=args.page_size))
         # Typed admission (DESIGN.md §10): a refused request raises an
         # AdmissionError subclass carrying queue_depth/max_queue, so a
         # caller can back off or report precisely — no message parsing.
@@ -114,6 +135,16 @@ def main():
               f"{summary['mean_slot_occupancy']:.2f} | TTFT p50 "
               f"{summary['ttft_ticks_p50']} ticks | "
               f"{summary['decode_tokens_per_s']:.1f} decode tok/s")
+        # DESIGN §11: page-pool pressure and prefix-cache reuse, when on.
+        if summary["num_pages"]:
+            print(f"  pages: {summary['pages_peak']}/"
+                  f"{summary['num_pages']} peak in use "
+                  f"({args.page_size} rows/page); leaked "
+                  f"{summary['final_pages_in_use']}")
+        if pc is not None:
+            print(f"  prefix cache: {summary['prefix_hits']} hits, "
+                  f"{summary['prefix_tokens_reused']} prompt tokens "
+                  f"reused | {pc.stats()}")
     dt = time.perf_counter() - t0
     total = sum(len(o) for o in outs)
     for i, o in enumerate(outs):

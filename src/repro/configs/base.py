@@ -201,6 +201,19 @@ class ServingConfig:
     detected fault the engine quarantines the slot (``reset_slot``) and
     re-admits the request up to ``fault_retries`` times before failing it
     with ``finish_reason="fault"``.
+
+    Paged slot memory (DESIGN.md §11): ``page_size > 0`` splits the KV
+    ring leaves of configs that support paging (non-windowed quadratic
+    rings) into shared physical pages; admission allocates
+    ``ceil((prompt + max_new) / page_size)`` pages, so short requests
+    stop paying ``max_len``. ``num_pages`` sizes the physical pool
+    (0 = ``num_slots * max_len / page_size``, i.e. no memory saving but
+    full paging mechanics — set it lower to overcommit). Constant-state
+    configs ignore both. ``prefix_cache_bytes > 0`` enables the
+    content-addressed prefix cache: admission seeds a slot from the
+    longest cached prompt-prefix snapshot and chunk-prefills only the
+    suffix (LRU-evicted under this byte budget; streams stay
+    byte-identical cached-vs-cold).
     """
 
     num_slots: int = 4
@@ -218,6 +231,9 @@ class ServingConfig:
     queue_wait_ticks: int = 0         # queue_wait policy: max queue age (ticks)
     fault_guard: bool = True          # NaN/Inf lane in the decode macro-step
     fault_retries: int = 1            # re-admissions after a slot quarantine
+    page_size: int = 0                # 0 = unpaged; else ring rows per page
+    num_pages: int = 0                # 0 = auto (num_slots * max_len / page)
+    prefix_cache_bytes: int = 0       # 0 = prefix cache off; else LRU budget
 
     def __post_init__(self):
         if self.num_slots < 1:
@@ -247,6 +263,16 @@ class ServingConfig:
             raise ValueError("queue_wait_ticks must be >= 0 (0 = no cap)")
         if self.fault_retries < 0:
             raise ValueError("fault_retries must be >= 0")
+        if self.page_size < 0 or self.num_pages < 0:
+            raise ValueError("page_size/num_pages must be >= 0")
+        if self.page_size and self.max_len % self.page_size:
+            raise ValueError(
+                f"page_size ({self.page_size}) must divide max_len "
+                f"({self.max_len})")
+        if self.num_pages and not self.page_size:
+            raise ValueError("num_pages requires page_size > 0")
+        if self.prefix_cache_bytes < 0:
+            raise ValueError("prefix_cache_bytes must be >= 0")
 
 
 @dataclasses.dataclass(frozen=True)

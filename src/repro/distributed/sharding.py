@@ -269,6 +269,7 @@ def _axis_entry(axes: tuple[str, ...]):
 
 def serving_cache_sharding(mesh: Mesh, rules: ShardingRules, abstract, *,
                            num_slots: int | None = None,
+                           num_pages: int | None = None,
                            slot_shards: int = 0,
                            fallback_log: list | None = None):
     """Slot-stable, slot-sharded decode-cache shardings for the pool.
@@ -289,9 +290,18 @@ def serving_cache_sharding(mesh: Mesh, rules: ShardingRules, abstract, *,
     ``num_slots``/``slot_shards``/``fallback_log`` follow
     :func:`pool_slot_axes`; ``num_slots`` is inferred from the leaves when
     omitted.
+
+    Paged pool (DESIGN.md §11): pass ``num_pages`` so the page dim —
+    dim 1 of the ``(nl, P, page, Hkv, dh)`` ring leaves — shards over the
+    same slot axes (pages are allocated shard-block-aligned with their
+    owning slots, so this keeps every page on its owner's shard). A
+    ``DecodeCache.pages`` PageState is sharded explicitly: table (S, Lp)
+    by slot dim 0, owner vectors (P,) by page dim 0.
     """
+    pstate = getattr(abstract, "pages", None)
+    base = abstract._replace(pages=None) if pstate is not None else abstract
     if num_slots is None:
-        for x in jax.tree.leaves(abstract):
+        for x in jax.tree.leaves(base):
             if len(x.shape) >= 2:
                 num_slots = int(x.shape[1])
                 break
@@ -314,7 +324,8 @@ def serving_cache_sharding(mesh: Mesh, rules: ShardingRules, abstract, *,
             return NamedSharding(
                 mesh, P(sax) if shape[0] == num_slots else P())
         spec: list = [None] * len(shape)
-        if shape[1] == num_slots:
+        if shape[1] == num_slots or (num_pages is not None
+                                     and shape[1] == num_pages):
             spec[1] = sax
         # Shard the head-like axis (dim 2 for state/ssm, dim 3 for kv ring).
         for cand in (3, 2):
@@ -326,7 +337,19 @@ def serving_cache_sharding(mesh: Mesh, rules: ShardingRules, abstract, *,
             spec.pop()
         return NamedSharding(mesh, P(*spec))
 
-    return jax.tree.map(one, abstract)
+    tree = jax.tree.map(one, base)
+    if pstate is not None:
+        tree = tree._replace(pages=page_state_sharding(mesh, sax, pstate))
+    return tree
+
+
+def page_state_sharding(mesh: Mesh, sax, pstate):
+    """Shardings for a PageState pytree: every child shards its leading
+    dim over the slot axes (table rows are slots; owner vectors are
+    pages, block-aligned with their owning shard)."""
+    cls = type(pstate)
+    return cls(NamedSharding(mesh, P(sax)), NamedSharding(mesh, P(sax)),
+               NamedSharding(mesh, P(sax)), shards=pstate.shards)
 
 
 def serving_vector_sharding(mesh: Mesh,

@@ -44,13 +44,27 @@ def forward(params, cfg: ArchConfig, batch: dict):
                                patch_embeds=batch.get("patch_embeds"))
 
 
-def init_cache(cfg: ArchConfig, batch: int, max_len: int):
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, *,
+               page_size: int = 0, num_pages: int = 0, shards: int = 1):
+    """``page_size > 0`` requests a *paged* pool cache (KV rings become
+    shared physical pages with a PageState table — DESIGN.md §11) for
+    configs that :func:`supports_paging`; ignored otherwise (constant-
+    state kinds have nothing to page)."""
+    if page_size and cfg.family != "encdec":
+        return transformer.init_cache(cfg, batch, max_len,
+                                      page_size=page_size,
+                                      num_pages=num_pages, shards=shards)
     return _mod(cfg).init_cache(cfg, batch, max_len)
 
 
-def abstract_cache(cfg: ArchConfig, batch: int, max_len: int):
+def abstract_cache(cfg: ArchConfig, batch: int, max_len: int, *,
+                   page_size: int = 0, num_pages: int = 0,
+                   shards: int = 1):
     """Cache shapes without allocation (decode dry-run cells)."""
-    return jax.eval_shape(lambda: init_cache(cfg, batch, max_len))
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_len,
+                                             page_size=page_size,
+                                             num_pages=num_pages,
+                                             shards=shards))
 
 
 # -- Slot-pooled cache surface (continuous-batching serving) ---------------
@@ -66,21 +80,45 @@ def abstract_cache(cfg: ArchConfig, batch: int, max_len: int):
 # they lower to shard-local writes — only the owning shard's block mutates.
 
 
-def reset_slot(cfg: ArchConfig, cache, slot: int):
+def reset_slot(cfg: ArchConfig, cache, slot: int, pages=None):
     """Zero one slot (eviction). Slot-stable: other rows untouched — and
     under a sharded pool, shard-local: only ``slot``'s static owner shard
-    writes; every other shard's bytes alias through the donated input."""
+    writes; every other shard's bytes alias through the donated input.
+    Paged pool: ``pages`` installs the host allocator's post-free
+    ``PageState`` (the slot's pages return to the free list)."""
+    if pages is not None:
+        return transformer.reset_slot(cfg, cache, slot, pages)
     return _mod(cfg).reset_slot(cfg, cache, slot)
 
 
-def write_slot(cfg: ArchConfig, cache, src, slot: int):
+def write_slot(cfg: ArchConfig, cache, src, slot: int, pages=None):
     """Install a batch=1 request cache into a pool slot (admission).
 
     ``src`` (a freshly prefilled request cache) is replicated by the
     engine's jit signature, so the prefill output lands directly on the
     owning shard as part of the donated pool update — admission never
-    moves another shard's slot bytes or reshards the pool."""
+    moves another shard's slot bytes or reshards the pool. Paged pool:
+    ``pages`` carries the post-allocation ``PageState``."""
+    if pages is not None:
+        return transformer.write_slot(cfg, cache, src, slot, pages)
     return _mod(cfg).write_slot(cfg, cache, src, slot)
+
+
+def supports_paging(cfg: ArchConfig) -> bool:
+    """Whether the pooled KV rings can be page-indexed (DESIGN.md §11).
+
+    True only for non-windowed exact quadratic rings — the one decode
+    state that scales with context. Constant-state kinds (linear SLAY,
+    SSM/hybrid carries) bypass paging: their per-slot state is O(1), the
+    paper's serving asymmetry."""
+    return cfg.family != "encdec" and transformer.supports_paging(cfg)
+
+
+def context_capacity(cfg: ArchConfig, max_len: int) -> int | None:
+    """Rows of context (prefix + prompt + decode budget) one slot admits;
+    ``None`` = unbounded (constant-state decode or an exactly-wrapping
+    windowed ring)."""
+    return _mod(cfg).context_capacity(cfg, max_len)
 
 
 def slot_state_finite(cfg: ArchConfig, cache) -> jax.Array:
@@ -108,18 +146,22 @@ def supports_chunked_prefill(cfg: ArchConfig) -> bool:
     """Whether prefill can be fed chunk-by-chunk with state continuation.
 
     True for every decoder-only config — all attention kinds (linear,
-    softmax, exact yat) and the ssm/hybrid scan-carry families
-    (DESIGN.md §9). False only for modality frontends (vision prefix is
-    absorbed whole) and encdec."""
+    softmax, exact yat), the ssm/hybrid scan-carry families, and vision
+    frontends (the patch prefix feeds through ``prefill_chunk(embeds=)``
+    chunk-by-chunk — DESIGN.md §9/§11). False only for encdec."""
     return _mod(cfg).supports_chunked_prefill(cfg)
 
 
-def prefill_chunk(cfg: ArchConfig, params, cache, tokens):
+def prefill_chunk(cfg: ArchConfig, params, cache, tokens, embeds=None):
     """Absorb one prompt chunk into an existing cache; last-token logits.
 
     Exact continuation for any chunk schedule: linear (S, z) and SSM
     (scan + conv-tail) carries are fp32; quadratic kinds re-attend the
-    ring prefix."""
+    ring prefix. ``embeds`` (B, Lc, d) feeds a pre-embedded chunk (vision
+    patch prefix) instead of token ids."""
+    if embeds is not None:
+        return transformer.prefill_chunk(params, cfg, cache, tokens,
+                                         embeds=embeds)
     return _mod(cfg).prefill_chunk(params, cfg, cache, tokens)
 
 

@@ -254,11 +254,26 @@ class DecodeCache(NamedTuple):
     ``pos`` is per slot — (B,) int32 — so a serving slot pool can hold
     sequences of different lengths (continuous batching): each slot's ring
     writes, validity masks, and RoPE phases advance independently.
+
+    ``pages`` is None for ordinary caches. For a *paged* serving pool
+    (DESIGN.md §11) it holds a ``serving.pages.PageState`` and the KV ring
+    leaves are page-indexed ``(nl, P, page, Hkv, dh)`` instead of
+    slot-indexed ``(nl, S, kv_len, Hkv, dh)``; the decode step gathers
+    each slot's pages to the dense ring layout, runs the unchanged
+    attention update, and scatters back — byte-identical by construction.
     """
 
     attn: attn.AttnCache | None
     ssm: ssm.SsmState | None
     pos: jnp.ndarray                # (B,) int32 tokens seen per slot
+    pages: object | None = None     # serving.pages.PageState when paged
+
+
+def _pages_mod():
+    # Lazy: keeps models -> serving import edges out of module init time
+    # (serving imports models.api; the cycle only resolves at call time).
+    from repro.serving import pages
+    return pages
 
 
 def _needs_kv(cfg: ArchConfig, max_len: int) -> bool:
@@ -267,13 +282,55 @@ def _needs_kv(cfg: ArchConfig, max_len: int) -> bool:
     return (not spec.is_linear) or mixed_local
 
 
-def init_cache(cfg: ArchConfig, batch: int, max_len: int) -> DecodeCache:
-    """Allocate the decode cache (union layout when layers are mixed)."""
+def supports_paging(cfg: ArchConfig) -> bool:
+    """Whether the pooled decode cache can page its KV rings (§11).
+
+    True only where paging buys anything: a non-windowed exact quadratic
+    ring (softmax / exact yat), which is the one state whose per-slot size
+    scales with context. Constant-state kinds (linear SLAY — a single
+    (S, z) accumulator) and SSM/hybrid scan carries are O(1) per slot, so
+    they bypass paging entirely; windowed rings are already bounded by the
+    window and wrap in place.
+    """
+    if cfg.family in ("ssm", "hybrid", "encdec"):
+        return False
+    if cfg.local_window or cfg.frontend:
+        return False
+    return not cfg.attention_spec().is_linear
+
+
+def context_capacity(cfg: ArchConfig, max_len: int) -> int | None:
+    """Max context rows (prefix + prompt + decode budget) a slot can hold.
+
+    ``None`` means unbounded: constant-state decode (linear kinds, SSM)
+    carries O(1) state regardless of context, and windowed rings wrap
+    exactly — only a *non-windowed quadratic* ring hard-caps admission at
+    its ``max_len`` allocation. This is what lets oversized linear-vision
+    prompts admit (absorbed chunk-by-chunk) instead of being rejected.
+    """
+    if cfg.family == "ssm":
+        return None
+    if cfg.attention_spec().is_linear or cfg.local_window:
+        return None
+    return max_len
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, *,
+               page_size: int = 0, num_pages: int = 0,
+               shards: int = 1) -> DecodeCache:
+    """Allocate the decode cache (union layout when layers are mixed).
+
+    With ``page_size > 0`` (and a config that :func:`supports_paging`) the
+    KV ring leaves are allocated page-indexed — ``(nl, num_pages,
+    page_size, Hkv, dh)`` physical pages shared by all ``batch`` slots —
+    and a fresh all-free ``PageState`` rides in ``cache.pages``.
+    """
     nl = cfg.num_layers
     dh = cfg.resolved_head_dim
     dtype = cfg.activation_dtype
     a_cache = None
     s_cache = None
+    page_state = None
     if cfg.family != "ssm":
         spec = cfg.attention_spec()
         kv_len = (min(max_len, cfg.local_window)
@@ -281,10 +338,22 @@ def init_cache(cfg: ArchConfig, batch: int, max_len: int) -> DecodeCache:
         m = spec.slay.feature_dim if spec.kind == "slay" else \
             attn._baseline_dim(spec, dh)
         lin_needed = spec.is_linear
-        k = jnp.zeros((nl, batch, kv_len, cfg.num_kv_heads, dh), dtype) \
-            if _needs_kv(cfg, max_len) else None
-        v = jnp.zeros((nl, batch, kv_len, cfg.num_kv_heads, dh), dtype) \
-            if _needs_kv(cfg, max_len) else None
+        paged = page_size > 0 and supports_paging(cfg)
+        if paged:
+            if kv_len % page_size:
+                raise ValueError(
+                    f"page_size={page_size} must divide kv_len={kv_len}")
+            lp = kv_len // page_size
+            np_ = num_pages if num_pages else batch * lp
+            k = jnp.zeros((nl, np_, page_size, cfg.num_kv_heads, dh), dtype)
+            v = jnp.zeros((nl, np_, page_size, cfg.num_kv_heads, dh), dtype)
+            page_state = _pages_mod().init_state(batch, np_, lp,
+                                                 shards=shards)
+        else:
+            k = jnp.zeros((nl, batch, kv_len, cfg.num_kv_heads, dh), dtype) \
+                if _needs_kv(cfg, max_len) else None
+            v = jnp.zeros((nl, batch, kv_len, cfg.num_kv_heads, dh), dtype) \
+                if _needs_kv(cfg, max_len) else None
         s = jnp.zeros((nl, batch, cfg.num_kv_heads, m, dh), jnp.float32) \
             if lin_needed else None
         z = jnp.zeros((nl, batch, cfg.num_kv_heads, m), jnp.float32) \
@@ -297,7 +366,8 @@ def init_cache(cfg: ArchConfig, batch: int, max_len: int) -> DecodeCache:
                                 cfg.ssm_ngroups, cfg.ssm_conv_width)
         s_cache = ssm.SsmState(jnp.zeros((nl, *st.h.shape), jnp.float32),
                                jnp.zeros((nl, *st.conv.shape), jnp.float32))
-    return DecodeCache(a_cache, s_cache, jnp.zeros((batch,), jnp.int32))
+    return DecodeCache(a_cache, s_cache, jnp.zeros((batch,), jnp.int32),
+                       page_state)
 
 
 def _state_passthrough(new, old, act):
@@ -373,6 +443,19 @@ def decode_step(params: dict, cfg: ArchConfig, cache: DecodeCache,
                 return y, _merge_cache(ac, c)
 
             y, nac = jax.lax.cond(is_local == 1, _local, _global)
+        elif cache.pages is not None:
+            # Paged pool (§11): gather this layer's pages to the dense
+            # (B, kv_len, Hkv, dh) ring the unpaged path uses, run the
+            # unchanged attention update on it, scatter owned pages back.
+            # `cache.pages` enters the scan as a constant (closure).
+            pg = _pages_mod()
+            dense = ac._replace(k=pg.gather_ring(ac.k, cache.pages),
+                                v=pg.gather_ring(ac.v, cache.pages))
+            y, nd = attn.decode_step(spec_g, slay_params, q, k, v, dense,
+                                     active=act)
+            nac = nd._replace(
+                k=pg.scatter_ring(ac.k, nd.k, cache.pages),
+                v=pg.scatter_ring(ac.v, nd.v, cache.pages))
         else:
             y, nac = attn.decode_step(spec_g, slay_params, q, k, v, ac,
                                       active=act)
@@ -408,7 +491,7 @@ def decode_step(params: dict, cfg: ArchConfig, cache: DecodeCache,
     logits = unembed(table, x, cfg.final_logit_softcap)
     step = 1 if act is None else act.astype(jnp.int32)
     return logits[:, None, :], DecodeCache(
-        new.get("attn"), new.get("ssm"), pos + step)
+        new.get("attn"), new.get("ssm"), pos + step, cache.pages)
 
 
 def supports_masked_prefill(cfg: ArchConfig) -> bool:
@@ -548,8 +631,8 @@ def prefill(params: dict, cfg: ArchConfig, tokens: jnp.ndarray, *,
         new.get("attn"), new.get("ssm"), pos)
 
 
-def reset_slot(cfg: ArchConfig, cache: DecodeCache,
-               slot: int) -> DecodeCache:
+def reset_slot(cfg: ArchConfig, cache: DecodeCache, slot: int,
+               pages=None) -> DecodeCache:
     """Zero one slot of a pooled decode cache (eviction).
 
     Constant-state path: the (S, z) accumulators zero — a single overwrite,
@@ -557,22 +640,48 @@ def reset_slot(cfg: ArchConfig, cache: DecodeCache,
     its pos resets, which is equivalent to eviction because validity is
     derived from pos. Every other slot's bytes are untouched, so the cache
     sharding (slot-stable by construction) never changes.
+
+    Paged pool: the slot's *owned pages* zero (so a quarantined slot's NaN
+    never survives into a page's next owner) and the freed table/owner
+    vectors the host allocator computed are installed via ``pages``.
     """
+    if cache.pages is not None:
+        pg = _pages_mod()
+        a = cache.attn._replace(
+            k=pg.write_zero_pages(cache.attn.k, slot, cache.pages),
+            v=pg.write_zero_pages(cache.attn.v, slot, cache.pages),
+            pos=cache.attn.pos.at[:, slot].set(0))
+        return DecodeCache(a, cache.ssm, cache.pos.at[slot].set(0),
+                           pages if pages is not None else cache.pages)
     z1 = jax.tree.map(lambda x: x.at[:, slot].set(0), cache.attn)
     zs = jax.tree.map(lambda x: x.at[:, slot].set(0), cache.ssm)
-    return DecodeCache(z1, zs, cache.pos.at[slot].set(0))
+    return DecodeCache(z1, zs, cache.pos.at[slot].set(0), cache.pages)
 
 
 def write_slot(cfg: ArchConfig, cache: DecodeCache, src: DecodeCache,
-               slot: int) -> DecodeCache:
+               slot: int, pages=None) -> DecodeCache:
     """Install a single-sequence cache (batch=1, e.g. a freshly prefilled
     request) into slot ``slot`` of a pooled cache (admission). Pool and
-    source must be built from the same cfg/max_len so leaf shapes agree."""
+    source must be built from the same cfg/max_len so leaf shapes agree.
+
+    Paged pool: ``pages`` carries the post-allocation ``PageState`` (the
+    host allocator assigned this slot its pages at admission); every owned
+    page is overwritten in full from the dense batch=1 source ring."""
+    if cache.pages is not None:
+        pg = _pages_mod()
+        st = pages if pages is not None else cache.pages
+        a = cache.attn._replace(
+            k=pg.write_slot_pages(cache.attn.k, src.attn.k, slot, st),
+            v=pg.write_slot_pages(cache.attn.v, src.attn.v, slot, st),
+            pos=cache.attn.pos.at[:, slot].set(src.attn.pos[:, 0]))
+        return DecodeCache(a, cache.ssm,
+                           cache.pos.at[slot].set(src.pos[0]), st)
     wa = jax.tree.map(lambda dst, s: dst.at[:, slot].set(s[:, 0]),
                       cache.attn, src.attn)
     ws = jax.tree.map(lambda dst, s: dst.at[:, slot].set(s[:, 0]),
                       cache.ssm, src.ssm)
-    return DecodeCache(wa, ws, cache.pos.at[slot].set(src.pos[0]))
+    return DecodeCache(wa, ws, cache.pos.at[slot].set(src.pos[0]),
+                       cache.pages)
 
 
 def slot_state_finite(cfg: ArchConfig, cache: DecodeCache) -> jnp.ndarray:
@@ -586,6 +695,11 @@ def slot_state_finite(cfg: ArchConfig, cache: DecodeCache) -> jnp.ndarray:
     into shard-local work — no collectives enter the §8 decode contract.
     """
     B = cache.pos.shape[0]
+    if cache.pages is not None:
+        # Per-page finiteness, attributed to the owning slot — free pages
+        # (stale bytes from an evicted owner) never taint a live slot.
+        return _pages_mod().pages_finite(
+            [cache.attn.k, cache.attn.v], cache.pages, B)
     ok = jnp.ones((B,), bool)
     for leaf in jax.tree.leaves((cache.attn, cache.ssm)):
         if not jnp.issubdtype(leaf.dtype, jnp.floating):
@@ -602,13 +716,21 @@ def corrupt_slot(cfg: ArchConfig, cache: DecodeCache,
     path). Mirrors :func:`reset_slot`'s slot-stable, shard-local update
     shape; integer leaves (positions) are left intact so the fault is a
     pure numeric corruption, not a bookkeeping one."""
+    if cache.pages is not None:
+        pg = _pages_mod()
+        a = cache.attn._replace(
+            k=pg.corrupt_slot_pages(cache.attn.k, slot, cache.pages),
+            v=pg.corrupt_slot_pages(cache.attn.v, slot, cache.pages))
+        return DecodeCache(a, cache.ssm, cache.pos, cache.pages)
+
     def nan_row(x):
         if not jnp.issubdtype(x.dtype, jnp.floating):
             return x
         return x.at[:, slot].set(jnp.nan)
 
     return DecodeCache(jax.tree.map(nan_row, cache.attn),
-                       jax.tree.map(nan_row, cache.ssm), cache.pos)
+                       jax.tree.map(nan_row, cache.ssm), cache.pos,
+                       cache.pages)
 
 
 def supports_chunked_prefill(cfg: ArchConfig) -> bool:
@@ -617,14 +739,17 @@ def supports_chunked_prefill(cfg: ArchConfig) -> bool:
     quadratic yat kinds attend ring prefix + masked intra-chunk scores,
     and ssm/hybrid carry the SSD scan state plus the causal-conv tail
     across chunk boundaries (``ssm.ssd_prefill_chunk``, DESIGN.md §9).
-    The only remaining gate here is a modality frontend (the vision patch
-    prefix is absorbed whole — bucketed masked-prefill fallback); encdec
-    is gated in ``whisper.supports_chunked_prefill``."""
-    return not cfg.frontend
+    Modality frontends chunk too: the vision patch prefix feeds through
+    ``prefill_chunk(embeds=...)`` piece by piece — same continuation, the
+    chunk input is just pre-embedded. Encdec is gated in
+    ``whisper.supports_chunked_prefill``."""
+    return True
 
 
 def prefill_chunk(params: dict, cfg: ArchConfig, cache: DecodeCache,
-                  tokens: jnp.ndarray) -> tuple[jnp.ndarray, DecodeCache]:
+                  tokens: jnp.ndarray, *,
+                  embeds: jnp.ndarray | None = None
+                  ) -> tuple[jnp.ndarray, DecodeCache]:
     """Absorb one prompt chunk into an existing decode cache.
 
     tokens (B, Lc); ``cache`` holds the state of the previously absorbed
@@ -636,20 +761,18 @@ def prefill_chunk(params: dict, cfg: ArchConfig, cache: DecodeCache,
     of stalling the pool. SSM/hybrid layers carry their (nh, hd, ds) scan
     state and (W-1, conv_dim) causal-conv tail across chunks
     (DESIGN.md §9).
+
+    ``embeds`` (B, Lc, d_model) feeds a pre-embedded chunk instead of
+    token ids — how a vision patch prefix is absorbed chunk-by-chunk
+    (``tokens`` is ignored when given). The continuation is position-
+    driven, so prefix-embed chunks and token chunks interleave exactly.
     """
-    if not supports_chunked_prefill(cfg):
-        # Name the gate that failed: family/kind gates are all cleared for
-        # decoder-only configs, so the only transformer-side gate left is
-        # the modality frontend (whisper raises its own family gate).
-        raise NotImplementedError(
-            f"chunked prefill unsupported for {cfg.name}: gate "
-            f"frontend={cfg.frontend!r} — the {cfg.frontend} prefix "
-            f"embeddings are absorbed whole, so there is no chunk "
-            f"continuation; serve this config via the bucketed "
-            f"masked-prefill fallback (family={cfg.family!r} and "
-            f"attn_kind={cfg.attn_kind!r} gates are cleared)")
-    B, Lc = tokens.shape
-    x = embed(params["embed"], tokens).astype(cfg.activation_dtype)
+    if embeds is not None:
+        x = embeds.astype(cfg.activation_dtype)
+        B, Lc = x.shape[0], x.shape[1]
+    else:
+        B, Lc = tokens.shape
+        x = embed(params["embed"], tokens).astype(cfg.activation_dtype)
     positions = cache.pos[:, None] + jnp.arange(Lc, dtype=jnp.int32)[None, :]
     slay_params = params.get("slay")
     kinds = jnp.asarray(_layer_kinds(cfg))
@@ -720,7 +843,7 @@ def prefill_chunk(params: dict, cfg: ArchConfig, cache: DecodeCache,
     table = params.get("unembed", params["embed"])
     logits = unembed(table, x, cfg.final_logit_softcap)
     return logits[:, None, :], DecodeCache(new.get("attn"), new.get("ssm"),
-                                           cache.pos + Lc)
+                                           cache.pos + Lc, cache.pages)
 
 
 def _merge_cache(template: attn.AttnCache, new: attn.AttnCache):

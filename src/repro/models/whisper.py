@@ -238,6 +238,12 @@ def supports_chunked_prefill(cfg: ArchConfig) -> bool:
     return False
 
 
+def context_capacity(cfg: ArchConfig, max_len: int) -> int | None:
+    """Linear decoders carry constant-size state (unbounded context);
+    softmax decoders are capped by the self-attention ring."""
+    return None if cfg.attention_spec().is_linear else max_len
+
+
 def supports_masked_prefill(cfg: ArchConfig) -> bool:
     """No ``true_len`` masking for encdec (the audio encoding dominates the
     prefill compile anyway; prompt-length bucketing buys nothing)."""

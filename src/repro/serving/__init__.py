@@ -1,7 +1,8 @@
 """Serving: lockstep + continuous-batching engines over KV-cache or
 constant-state decode paths, with a typed fault-tolerant request
 lifecycle (deadlines, cancellation, load-shedding, NaN quarantine —
-DESIGN.md §10) and a deterministic chaos harness."""
+DESIGN.md §10), paged slot memory + a content-addressed prefix cache
+(DESIGN.md §11), and a deterministic chaos harness."""
 from repro.serving.engine import (AdmissionError,  # noqa: F401
                                   ContinuousServingEngine, EngineMetrics,
                                   QueueFullError, Request,
@@ -9,4 +10,7 @@ from repro.serving.engine import (AdmissionError,  # noqa: F401
                                   ServingEngine, ServingMetrics,
                                   jit_serve_fns)
 from repro.serving.faults import FaultInjector  # noqa: F401
+from repro.serving.pages import PagePool, PageState  # noqa: F401
+from repro.serving.prefix_cache import (PrefixCache,  # noqa: F401
+                                        PrefixEntry)
 from repro.serving.sampling import FINISH_REASONS  # noqa: F401

@@ -10,14 +10,22 @@ Two engines share one model surface (``repro.models.api``):
   requests queue, are admitted into free slots via *chunked prefill*
   (interleaved with decode ticks so long prompts never stall the pool),
   stream tokens per request, and on EOS/max-tokens are evicted by a single
-  slot overwrite — no paging.
+  slot overwrite.
 
 Why continuous batching is dramatically simpler for SLAY than for KV-cache
 models: the constant-state path's per-slot decode state is O(m·dv) per
 layer-head *regardless of context length*, so admitting a new request is a
 single ``write_slot`` overwrite of a fixed-size block and evicting is a
-``reset_slot`` zero — there is no paged KV allocator, no fragmentation, no
-copy-out. The KV path rides the same surface with ring-buffer slot resets.
+``reset_slot`` zero — no paged KV allocator needed, no fragmentation, no
+copy-out. The KV path rides the same surface with ring-buffer slot resets;
+with ``ServingConfig.page_size`` set, its rings additionally draw physical
+pages from a shared :class:`repro.serving.pages.PagePool` (DESIGN.md §11)
+so short and long requests share HBM — constant-state kinds bypass paging
+(their state is O(1), the paper's serving asymmetry). A
+``prefix_cache_bytes`` budget enables the content-addressed prefix cache
+(``repro.serving.prefix_cache``): admissions whose prompt shares a cached
+prefix seed their slot from a stored state snapshot and chunk-prefill only
+the suffix.
 
 Cache shardings come from ``sharding.serving_cache_sharding`` and depend
 only on pool shape — never on which slots are live — so admission/eviction
@@ -48,6 +56,8 @@ import numpy as np
 from repro.configs.base import ArchConfig, ServingConfig
 from repro.distributed import sharding as shd
 from repro.models import api
+from repro.serving import pages as pages_lib
+from repro.serving import prefix_cache as prefix_lib
 from repro.serving import sampling
 
 
@@ -321,6 +331,8 @@ class RequestStats:
     arrival_wall: float | None = None
     finish_reason: str | None = None  # sampling.FINISH_REASONS; None = live
     retries: int = 0                 # fault-quarantine re-admissions so far
+    prefix_cached: bool = False      # seeded from the prefix cache (§11)
+    prefix_tokens: int = 0           # prompt tokens reused from a snapshot
 
     @property
     def ttft_ticks(self) -> float | None:
@@ -383,6 +395,13 @@ class ServingMetrics:
     faults_detected: int = 0    # non-finite slots quarantined (count)
     fault_retries: int = 0      # re-admissions after a quarantine (count)
     fault_retries_succeeded: int = 0  # retried requests ending eos|length
+    # Prefix-cache + paged-pool instrumentation (DESIGN.md §11). The page
+    # gauges mirror the host allocator; 0 everywhere when unpaged.
+    prefix_hits: int = 0        # admissions seeded from the prefix cache
+    prefix_tokens_reused: int = 0  # prompt tokens skipped via snapshots
+    num_pages: int = 0          # paged-pool size in pages (0 = unpaged)
+    pages_in_use: int = 0       # gauge: pages currently allocated
+    pages_peak: int = 0         # high-water mark of pages_in_use
     fault_events: list = dataclasses.field(  # per-quarantine records
         default_factory=list)
     wall_start: float = dataclasses.field(  # engine construction time (wall)
@@ -401,6 +420,12 @@ class ServingMetrics:
                        if s.ttft_ticks is not None)
         ttfts_s = sorted(s.ttft_s for s in self.per_request.values()
                          if s.ttft_s is not None)
+        # Split TTFT by prefix-cache seeding — the §11 win the bench
+        # contract asserts on (cached admissions skip prefill work).
+        ttfts_c = sorted(s.ttft_ticks for s in self.per_request.values()
+                         if s.ttft_ticks is not None and s.prefix_cached)
+        ttfts_w = sorted(s.ttft_ticks for s in self.per_request.values()
+                         if s.ttft_ticks is not None and not s.prefix_cached)
 
         def pct(xs, q):
             return xs[min(int(q * len(xs)), len(xs) - 1)] if xs else None
@@ -450,6 +475,15 @@ class ServingMetrics:
             "ttft_ticks_p95": pct(ttfts, 0.95),
             "ttft_s_p50": pct(ttfts_s, 0.50),
             "ttft_s_p95": pct(ttfts_s, 0.95),
+            "prefix_hits": self.prefix_hits,
+            "prefix_tokens_reused": self.prefix_tokens_reused,
+            "ttft_cached_ticks_p50": pct(ttfts_c, 0.50),
+            "ttft_cached_ticks_p95": pct(ttfts_c, 0.95),
+            "ttft_cold_ticks_p50": pct(ttfts_w, 0.50),
+            "ttft_cold_ticks_p95": pct(ttfts_w, 0.95),
+            "num_pages": self.num_pages,
+            "pages_in_use": self.pages_in_use,
+            "pages_peak": self.pages_peak,
         }
 
 
@@ -475,6 +509,8 @@ class _Prefill:
     slot: int
     cache: object                    # per-request (batch=1) decode cache
     offset: int = 0                  # prompt tokens absorbed so far
+    prefix_offset: int = 0           # pre-embedded frontend rows absorbed
+    logits: object | None = None     # (1, 1, V) — full prefix-cache hit
 
 
 class Scheduler:
@@ -571,18 +607,27 @@ class Scheduler:
         while self.waiting and self.waiting[0][1].arrival_time <= now:
             self.ready.append(self.waiting.popleft())
 
-    def next_admission(self):
+    def next_admission(self, slot_ok=None):
         """Pop the request to admit next, reserving a slot — or None.
 
         The slot comes from the least-loaded shard (see class docstring);
-        request order itself stays strictly FIFO."""
+        request order itself stays strictly FIFO. ``slot_ok(slot, req)``
+        further filters candidate slots (the paged pool gates on its
+        shard's free pages — DESIGN.md §11); when no slot qualifies the
+        head request stays queued (head-of-line waits for pages to free,
+        preserving FIFO admission order)."""
         if not self.ready or not self.free:
             return None
-        rid, req = self.ready.popleft()
+        rid, req = self.ready[0]
+        cands = (self.free if slot_ok is None
+                 else [s for s in self.free if slot_ok(s, req)])
+        if not cands:
+            return None
+        self.ready.popleft()
         load = [0] * self.slot_shards
         for slot in self.active:
             load[self.shard_of(slot)] += 1
-        slot = min(self.free, key=lambda s: (load[self.shard_of(s)], s))
+        slot = min(cands, key=lambda s: (load[self.shard_of(s)], s))
         self.free.remove(slot)
         return rid, req, slot
 
@@ -659,7 +704,7 @@ class ContinuousServingEngine:
     def __init__(self, cfg: ArchConfig, params, mesh, *,
                  serving: ServingConfig = ServingConfig(),
                  rules: shd.ShardingRules = shd.DEFAULT_RULES,
-                 fault_injector=None):
+                 fault_injector=None, prefix_cache=None):
         self.cfg, self.params, self.mesh = cfg, params, mesh
         self.serving = serving
         self.rules = rules
@@ -678,9 +723,37 @@ class ContinuousServingEngine:
             mesh, rules, S, serving.slot_shards,
             self.slot_shard_fallbacks)
         self.sched = Scheduler(serving, self.slot_shards)
-        self.metrics = ServingMetrics(num_slots=serving.num_slots,
-                                      macro_ticks=serving.macro_ticks,
-                                      slot_shards=self.slot_shards)
+        # Paged slot memory (DESIGN.md §11): only KV-ring kinds page —
+        # constant-state (linear SLAY / SSM carry) decode state is O(1)
+        # per slot, so a page_size request is a silent no-op for them.
+        self._paged = bool(serving.page_size) and api.supports_paging(cfg)
+        self.page_pool: pages_lib.PagePool | None = None
+        if self._paged:
+            lp = L // serving.page_size      # config validates divisibility
+            num_pages = serving.num_pages or S * lp
+            if num_pages % self.slot_shards:
+                raise ValueError(
+                    f"num_pages={num_pages} must divide evenly over "
+                    f"{self.slot_shards} slot shards (the page dim shards "
+                    f"in the same static blocks as the slot dim — §8)")
+            self.page_pool = pages_lib.PagePool(
+                S, num_pages, serving.page_size, lp,
+                shards=self.slot_shards)
+        # Content-addressed prefix cache (DESIGN.md §11): seeding relies
+        # on chunked-prefill state continuation, so encdec (the one
+        # non-chunkable family) never caches. A shared instance can be
+        # passed in (warm-up engine populates, measured engine hits).
+        self.prefix_cache = prefix_cache
+        if self.prefix_cache is None and serving.prefix_cache_bytes:
+            self.prefix_cache = prefix_lib.PrefixCache(
+                serving.prefix_cache_bytes)
+        if not api.supports_chunked_prefill(cfg):
+            self.prefix_cache = None
+        self._pfx_refs: dict[int, prefix_lib.PrefixEntry] = {}
+        self.metrics = ServingMetrics(
+            num_slots=serving.num_slots, macro_ticks=serving.macro_ticks,
+            slot_shards=self.slot_shards,
+            num_pages=self.page_pool.num_pages if self._paged else 0)
         self.tick = 0
         self._next_rid = 0
         self._outputs: dict[int, list] = {}
@@ -697,10 +770,15 @@ class ContinuousServingEngine:
         # (DESIGN.md §8 zero-collective contract).
         p_sh = shd.logical_to_sharding(mesh, shd.serving_param_rules(rules),
                                        p_abs, axes)
-        c_abs = api.abstract_cache(cfg, S, L)
+        page_kw = dict(page_size=serving.page_size if self._paged else 0,
+                       num_pages=(self.page_pool.num_pages
+                                  if self._paged else 0),
+                       shards=self.slot_shards)
+        c_abs = api.abstract_cache(cfg, S, L, **page_kw)
         c_sh = shd.serving_cache_sharding(
             mesh, rules, c_abs, num_slots=S,
-            slot_shards=serving.slot_shards)
+            slot_shards=serving.slot_shards,
+            num_pages=self.page_pool.num_pages if self._paged else None)
         # Per-slot control vectors and the (K, S) token/emitted buffers
         # carry the same slot sharding as the pool cache.
         v_sh = shd.serving_vector_sharding(mesh, rules, num_slots=S,
@@ -712,7 +790,8 @@ class ContinuousServingEngine:
                                             jax.sharding.PartitionSpec())
         self._abstract = (p_abs, c_abs)
         with mesh:
-            self.pool = jax.device_put(api.init_cache(cfg, S, L), c_sh)
+            self.pool = jax.device_put(api.init_cache(cfg, S, L, **page_kw),
+                                       c_sh)
             self.params = jax.device_put(params, p_sh)
         # Host mirrors of the per-slot decode vectors fed to the jitted
         # macro-step. The replay loop applies the *same* emit/EOS/budget
@@ -747,14 +826,31 @@ class ContinuousServingEngine:
         # The batch=1 source cache is pinned replicated, so a write_slot is
         # a shard-local donated dynamic-update: only the owning shard's
         # block changes, the others alias their input bytes.
-        self._write_fn = jax.jit(
-            lambda pool, src, i: api.write_slot(cfg, pool, src, i),
-            in_shardings=(c_sh, rep_sh, None), out_shardings=c_sh,
-            donate_argnums=(0,))
-        self._reset_fn = jax.jit(
-            lambda pool, i: api.reset_slot(cfg, pool, i),
-            in_shardings=(c_sh, None), out_shardings=c_sh,
-            donate_argnums=(0,))
+        if self._paged:
+            # Paged variants additionally take the host allocator's
+            # PageState snapshot (write: post-alloc mapping to install;
+            # reset: post-free mapping — the op zeroes the slot's pages
+            # via the *old* device mapping first, so a freed page always
+            # hands zeros to its next owner).
+            pg_sh = c_sh.pages
+            self._write_fn = jax.jit(
+                lambda pool, src, i, st: api.write_slot(cfg, pool, src, i,
+                                                        st),
+                in_shardings=(c_sh, rep_sh, None, pg_sh),
+                out_shardings=c_sh, donate_argnums=(0,))
+            self._reset_fn = jax.jit(
+                lambda pool, i, st: api.reset_slot(cfg, pool, i, st),
+                in_shardings=(c_sh, None, pg_sh), out_shardings=c_sh,
+                donate_argnums=(0,))
+        else:
+            self._write_fn = jax.jit(
+                lambda pool, src, i: api.write_slot(cfg, pool, src, i),
+                in_shardings=(c_sh, rep_sh, None), out_shardings=c_sh,
+                donate_argnums=(0,))
+            self._reset_fn = jax.jit(
+                lambda pool, i: api.reset_slot(cfg, pool, i),
+                in_shardings=(c_sh, None), out_shardings=c_sh,
+                donate_argnums=(0,))
         # Fault injection (chaos harness only): NaN one slot's float
         # state. Same slot-stable donated-update shape as reset_slot;
         # never compiled unless an injector actually fires.
@@ -764,6 +860,13 @@ class ContinuousServingEngine:
             donate_argnums=(0,))
         self._chunk_fn = jax.jit(
             lambda p, c, t: api.prefill_chunk(cfg, p, c, t),
+            donate_argnums=(1,))
+        # Pre-embedded prefill chunks (vision patch prefix): same donated
+        # continuation, fed (1, Lc, d) rows instead of token ids — this is
+        # what lets an oversized vision prompt absorb its patch prefix
+        # chunk-by-chunk instead of being rejected at admission (§11).
+        self._chunk_embeds_fn = jax.jit(
+            lambda p, c, e: api.prefill_chunk(cfg, p, c, None, embeds=e),
             donate_argnums=(1,))
         self._prefill_fn = jax.jit(
             lambda p, b: api.prefill(p, cfg, b, max_len=L))
@@ -793,12 +896,24 @@ class ContinuousServingEngine:
         prefix = (self.cfg.num_patches
                   if self.cfg.frontend == "vision" else 0)
         need = prefix + len(req.prompt) + req.max_new_tokens
-        if need > self.serving.max_len:
+        # Capacity is per config kind (api.context_capacity): None means
+        # unbounded — constant-state decode (linear SLAY, SSM carries) or
+        # an exactly-wrapping windowed ring — so an oversized prompt (e.g.
+        # a linear-attention vision request whose patch prefix + prompt
+        # exceeds max_len) is admitted and absorbed chunk-by-chunk (§11).
+        # Unbounded admission still requires chunked prefill: the
+        # non-chunkable fallback runs one full-length prefill that cannot
+        # exceed the ring.
+        cap = api.context_capacity(self.cfg, self.serving.max_len)
+        if cap is None and not (self._chunkable
+                                and self.serving.prefill_chunk):
+            cap = self.serving.max_len
+        if cap is not None and need > cap:
             raise RequestTooLargeError(
                 f"request does not fit its decode slot: "
                 + (f"{prefix} vision-prefix patches + " if prefix else "")
                 + f"{len(req.prompt)} prompt + {req.max_new_tokens} "
-                f"max_new = {need} > max_len {self.serving.max_len} "
+                f"max_new = {need} > context capacity {cap} "
                 f"(the cache ring would overwrite live context; shorten "
                 f"the prompt/max_new_tokens or raise ServingConfig."
                 f"max_len)",
@@ -874,29 +989,109 @@ class ContinuousServingEngine:
         # deadline evictions, returned its slot to the pool.
         summary["final_occupancy"] = self.sched.occupancy
         summary["final_queue_depth"] = self.sched.queue_depth
+        # Paged pool: every exit path returned its pages to the free list
+        # ("pages leaked = 0" — the CI bench contract asserts this).
+        summary["final_pages_in_use"] = (
+            self.page_pool.pages_in_use() if self.page_pool else 0)
         return outs, summary
 
     # -- internals ----------------------------------------------------------
 
+    def _need_rows(self, req: Request) -> int:
+        """Context rows a request occupies: frontend prefix + prompt +
+        decode budget (what the page allocator sizes a slot's pages by)."""
+        prefix = (self.cfg.num_patches
+                  if self.cfg.frontend == "vision" else 0)
+        return prefix + len(req.prompt) + req.max_new_tokens
+
+    def _note_pages(self):
+        self.metrics.pages_in_use = self.page_pool.pages_in_use()
+        self.metrics.pages_peak = self.page_pool.pages_peak
+
+    def _seed_from_prefix(self, pf: _Prefill, C: int):
+        """Seed an admission from the longest cached prompt prefix (§11).
+
+        A full-prompt hit skips prefill entirely (the stored last-token
+        logits sample token 0 — sampling is keyed (seed, rid, idx), never
+        on how the state was produced). A proper-prefix hit deep-copies
+        the snapshot (the donating chunk jit would invalidate the cached
+        buffers) and chunk-prefills only the suffix — hits land on chunk
+        multiples only, so the suffix chunk schedule is identical to a
+        cold prefill's and the stream stays byte-identical."""
+        entry = self.prefix_cache.lookup(pf.req.prompt, chunk=C)
+        if entry is None:
+            return
+        self.prefix_cache.acquire(entry)
+        self._pfx_refs[pf.rid] = entry
+        st = self.metrics.per_request[pf.rid]
+        st.prefix_cached = True
+        st.prefix_tokens = entry.length
+        self.metrics.prefix_hits += 1
+        self.metrics.prefix_tokens_reused += entry.length
+        if entry.length == len(pf.req.prompt):
+            pf.cache = entry.cache   # write_slot does not donate its src
+            pf.logits = entry.logits
+        else:
+            pf.cache = prefix_lib.tree_copy(entry.cache)
+        pf.offset = entry.length
+        pf.prefix_offset = (self.cfg.num_patches
+                            if self.cfg.frontend == "vision" else 0)
+
     def _prefill_tick(self):
         pf = self._prefill
+        C = self.serving.prefill_chunk
         if pf is None:
-            admission = self.sched.next_admission()
+            slot_ok = None
+            if self.page_pool is not None:
+                slot_ok = (lambda s, r:
+                           self.page_pool.can_alloc(s, self._need_rows(r)))
+            admission = self.sched.next_admission(slot_ok)
             if admission is None:
                 return
             rid, req, slot = admission
             pf = _Prefill(rid, req, slot,
                           api.init_cache(self.cfg, 1, self.serving.max_len))
+            if self.page_pool is not None:
+                # Host-side reservation only: the device PageState learns
+                # the mapping at install (write_slot) time, so an
+                # admission cancelled mid-prefill frees host-side with no
+                # device op — and freshly freed pages are zeros (reset
+                # zeroes them via the old mapping), never stale bytes.
+                self.page_pool.alloc(slot, self._need_rows(req))
+                self._note_pages()
+            if self.prefix_cache is not None and self._chunkable and C:
+                self._seed_from_prefix(pf, C)
             self._prefill = pf
             self.metrics.per_request[rid].admitted = self.tick
             self.metrics.per_request[rid].slot = slot
         req, prompt = pf.req, np.asarray(pf.req.prompt, np.int32)
-        C = self.serving.prefill_chunk
-        if self._chunkable and C:
+        logits = pf.logits
+        if logits is not None:
+            pass                     # full prefix-cache hit: nothing to run
+        elif self._chunkable and C:
+            patches = (self.cfg.num_patches
+                       if self.cfg.frontend == "vision" else 0)
+            if pf.prefix_offset < patches:
+                # Vision patch prefix, absorbed as pre-embedded rows chunk
+                # by chunk — this is why an oversized vision prompt no
+                # longer needs (and is no longer bounded by) a full-length
+                # prefill (§11 bugfix).
+                n = min(C, patches - pf.prefix_offset)
+                emb = jnp.zeros((1, n, self.cfg.d_model),
+                                self.cfg.activation_dtype)
+                _, pf.cache = self._chunk_embeds_fn(self.params, pf.cache,
+                                                    emb)
+                pf.prefix_offset += n
+                return
             chunk = prompt[pf.offset:pf.offset + C]
             toks = jnp.asarray(chunk[None, :])
             logits, pf.cache = self._chunk_fn(self.params, pf.cache, toks)
             pf.offset += len(chunk)
+            if (self.prefix_cache is not None and pf.offset % C == 0
+                    and pf.offset < len(prompt)):
+                # Chunk-boundary snapshot: a future prompt sharing this
+                # prefix seeds from it and prefills only its suffix.
+                self.prefix_cache.insert(prompt[:pf.offset], pf.cache)
         elif self._bucketable:
             # Non-chunkable fallback, bucketed: right-pad to the pow-2
             # bucket and mask exactly via true_len — one compile per
@@ -935,9 +1130,22 @@ class ContinuousServingEngine:
             logits[:, -1, :], jnp.full((1,), pf.rid, jnp.int32),
             jnp.zeros((1,), jnp.int32))[0])
         self.metrics.prefill_token_syncs += 1
-        self.pool = self._write_fn(self.pool, pf.cache, jnp.int32(pf.slot))
+        if (self.prefix_cache is not None and self._chunkable and C
+                and pf.logits is None):
+            # Full-prompt entry with last-token logits: a repeat of this
+            # exact prompt becomes a zero-prefill admission.
+            self.prefix_cache.insert(prompt, pf.cache,
+                                     logits=logits[:, -1:, :])
+        if self.page_pool is not None:
+            self.pool = self._write_fn(self.pool, pf.cache,
+                                       jnp.int32(pf.slot),
+                                       self.page_pool.device_vectors())
+        else:
+            self.pool = self._write_fn(self.pool, pf.cache,
+                                       jnp.int32(pf.slot))
         self._prefill = None
-        self.metrics.prompt_tokens += len(prompt)
+        self.metrics.prompt_tokens += (
+            len(prompt) - self.metrics.per_request[pf.rid].prefix_tokens)
         slot_rec = _Slot(pf.rid, req, tok0)
         self.sched.active[pf.slot] = slot_rec
         self._last_tok[pf.slot] = tok0
@@ -1009,6 +1217,7 @@ class ContinuousServingEngine:
         fns = {"macro_decode": self._macro_fn, "sample": self._sample_fn,
                "write": self._write_fn, "reset": self._reset_fn,
                "corrupt": self._corrupt_fn, "chunk": self._chunk_fn,
+               "chunk_embeds": self._chunk_embeds_fn,
                "prefill": self._prefill_fn,
                "prefill_masked": self._prefill_masked_fn}
         out = {}
@@ -1045,13 +1254,26 @@ class ContinuousServingEngine:
         if rec.req.on_token is not None:
             rec.req.on_token(rec.rid, tok)
 
+    def _evict_slot_state(self, slot: int):
+        """Zero a slot's device state; paged pools first return its pages
+        to the free list (the reset op zeroes them via the old device
+        mapping, so the next owner always reads zeros — never a prior
+        slot's bytes, in particular never an injected NaN)."""
+        if self.page_pool is not None:
+            self.page_pool.free_slot(slot)
+            self._note_pages()
+            self.pool = self._reset_fn(self.pool, jnp.int32(slot),
+                                       self.page_pool.device_vectors())
+        else:
+            self.pool = self._reset_fn(self.pool, jnp.int32(slot))
+
     def _finish(self, slot: int, reason: str):
         """Evict a slot-resident request into terminal state ``reason``."""
         rec = self.sched.active[slot]
         self._active[slot] = False
         # Eviction = one slot overwrite (constant-state asymmetry: O(m·dv)
         # zeros for SLAY vs an O(max_len) ring zero for KV backends).
-        self.pool = self._reset_fn(self.pool, jnp.int32(slot))
+        self._evict_slot_state(slot)
         self.sched.evict(slot)
         self._terminate(rec.rid, rec.req, reason)
 
@@ -1063,6 +1285,9 @@ class ContinuousServingEngine:
         st = self.metrics.per_request[rid]
         st.finished = self.tick
         st.finish_reason = reason
+        entry = self._pfx_refs.pop(rid, None)
+        if entry is not None:       # release the seeding snapshot's pin
+            self.prefix_cache.release(entry)
         m = self.metrics
         m.requests_terminated += 1
         m.finish_reasons[reason] = m.finish_reasons.get(reason, 0) + 1
@@ -1089,19 +1314,34 @@ class ContinuousServingEngine:
         m.fault_events.append({"rid": rec.rid, "slot": slot,
                                "tick": self.tick})
         self._active[slot] = False
-        self.pool = self._reset_fn(self.pool, jnp.int32(slot))
+        self._evict_slot_state(slot)
         self.sched.evict(slot)
+        ent = self._pfx_refs.pop(rec.rid, None)
+        if ent is not None:
+            self.prefix_cache.release(ent)
         if st.retries < self.serving.fault_retries:
             st.retries += 1
             m.fault_retries += 1
             self._outputs[rec.rid] = []
             st.first_token = None
             st.first_token_wall = None
+            st.prefix_cached = False
+            st.prefix_tokens = 0
             # Head of the ready queue: the request already waited its
             # turn once; retry latency is one admission, not a requeue.
             self.sched.ready.appendleft((rec.rid, rec.req))
         else:
             self._terminate(rec.rid, rec.req, "fault")
+
+    def _release_prefill_slot(self, slot: int):
+        """Return a mid-prefill slot to the pool (cancel/deadline before
+        install). Pages were only ever reserved host-side — the device
+        PageState never learned the mapping — so freeing is host-only."""
+        self.sched.free.append(slot)
+        self.sched.free.sort()
+        if self.page_pool is not None:
+            self.page_pool.free_slot(slot)
+            self._note_pages()
 
     # -- lifecycle: cancellation, deadlines, queue-age shedding -------------
 
@@ -1123,8 +1363,7 @@ class ContinuousServingEngine:
         pf = self._prefill
         if pf is not None and pf.rid == rid:  # admission in flight
             self._prefill = None
-            self.sched.free.append(pf.slot)
-            self.sched.free.sort()
+            self._release_prefill_slot(pf.slot)
             self._terminate(rid, pf.req, "cancelled")
             return True
         for slot, rec in self.sched.active.items():
@@ -1187,8 +1426,7 @@ class ContinuousServingEngine:
         pf = self._prefill
         if pf is not None and expired(pf.req, per[pf.rid]):
             self._prefill = None
-            sched.free.append(pf.slot)
-            sched.free.sort()
+            self._release_prefill_slot(pf.slot)
             self._terminate(pf.rid, pf.req, "deadline")
         for slot, rec in list(sched.active.items()):
             if expired(rec.req, per[rec.rid]):

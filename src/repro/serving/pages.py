@@ -1,0 +1,358 @@
+"""Paged slot memory: a page-table layer under the serving slot pool.
+
+Unpaged, every slot of the pool reserves ``kv_len`` ring rows up front —
+a short chat request pays the same HBM as a long-context one. This module
+splits the KV/ring leaves of the pooled decode cache into fixed-size
+*pages* drawn from one shared physical pool:
+
+    unpaged kv leaf   (nl, S, kv_len, Hkv, dh)
+    paged kv leaf     (nl, P, page,   Hkv, dh)     P * page <= S * kv_len
+
+``PagePool`` (host side) owns the free list and the per-slot page tables;
+``PageState`` (device side) is the jit-traced mirror — a registered pytree
+riding inside ``DecodeCache`` so the decode hot loop stays one fixed-shape
+dispatch. Admission allocates ``ceil(need / page)`` pages where ``need``
+is the request's true context horizon (prefix + prompt + max_new), so
+short requests leave pages free for long ones — the memory-sharing win.
+
+Two hard contracts (DESIGN.md §11):
+
+* **Byte identity.** Inside the decode step the paged ring is gathered to
+  the same dense ``(S, kv_len, ...)`` layout the unpaged path uses, the
+  unchanged attention decode runs on it, and the result scatters back
+  into owned pages. Unmapped table entries materialize as zeros — exactly
+  what the unpaged reset-zeroed rows hold — so streams are byte-identical
+  paged-vs-unpaged by construction.
+* **Zero collectives.** The page dim shards over the ``data`` mesh axis
+  in the same static contiguous blocks as the slot dim, and the allocator
+  only ever hands a slot pages from its own shard's block. The
+  gather/scatter below are written shard-explicitly (reshape to a leading
+  shard dim, index within it), so GSPMD partitions them without any
+  cross-shard data movement and ``decode_hlo()`` stays collective-free
+  (DESIGN.md §8).
+
+Constant-state kinds (linear SLAY ``(S, z)``, SSM carries) bypass paging
+entirely: their per-slot state is O(1) in context length, so there is
+nothing to page (the paper's point — PAPER.md §3).
+
+This module imports only jax/numpy (no repro.* — models code lazily
+imports it, keeping the models<->serving layering acyclic).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_pytree_node_class
+class PageState:
+    """Device-side page tables: the traced half of the allocator.
+
+    table      (S, Lp) int32   global page id of slot s's logical page j,
+                               -1 where unmapped
+    owner_slot (P,)    int32   slot owning physical page p, -1 if free
+    owner_lp   (P,)    int32   logical index of page p within its owner
+
+    ``shards`` (static aux data) is the slot/page shard count D — needed
+    inside jit because it is not derivable from leaf shapes.
+    """
+
+    def __init__(self, table, owner_slot, owner_lp, *, shards: int = 1):
+        self.table = table
+        self.owner_slot = owner_slot
+        self.owner_lp = owner_lp
+        self.shards = int(shards)
+
+    def tree_flatten(self):
+        return (self.table, self.owner_slot, self.owner_lp), self.shards
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, shards=aux)
+
+    @property
+    def num_pages(self) -> int:
+        return int(self.owner_slot.shape[0])
+
+
+def init_state(num_slots: int, num_pages: int, pages_per_slot: int, *,
+               shards: int = 1) -> PageState:
+    """All-free PageState (fresh pool: every table entry unmapped)."""
+    return PageState(
+        jnp.full((num_slots, pages_per_slot), -1, jnp.int32),
+        jnp.full((num_pages,), -1, jnp.int32),
+        jnp.full((num_pages,), -1, jnp.int32), shards=shards)
+
+
+# ---------------------------------------------------------------------------
+# Device helpers — all shard-explicit (leading reshape to D blocks) so the
+# compiled decode loop stays free of cross-shard collectives.
+# ---------------------------------------------------------------------------
+
+
+def _split(n: int, d: int, what: str) -> int:
+    if n % d:
+        raise ValueError(f"{what}={n} not divisible by shards={d}")
+    return n // d
+
+
+def gather_ring(leaf: jax.Array, state: PageState) -> jax.Array:
+    """Materialize one paged ring leaf as its dense unpaged layout.
+
+    leaf (P, page, *tail)  ->  (S, Lp*page, *tail); unmapped logical pages
+    read as zeros (byte-identical to the unpaged pool's reset rows).
+    """
+    D = state.shards
+    P, page = int(leaf.shape[0]), int(leaf.shape[1])
+    S, Lp = int(state.table.shape[0]), int(state.table.shape[1])
+    tail = leaf.shape[2:]
+    Pn = _split(P, D, "num_pages")
+    Sd = _split(S, D, "num_slots")
+    kp = leaf.reshape((D, Pn * page) + tail)
+    tbl = state.table.reshape(D, Sd, Lp)
+    # Shard-local page index; rows of each selected page.
+    loc = tbl - (jnp.arange(D, dtype=jnp.int32) * Pn)[:, None, None]
+    rows = (jnp.clip(loc, 0, Pn - 1)[..., None] * page
+            + jnp.arange(page, dtype=jnp.int32))          # (D, Sd, Lp, page)
+    idx = rows.reshape(D, Sd * Lp * page)
+    idxb = idx.reshape(idx.shape + (1,) * len(tail))
+    out = jnp.take_along_axis(kp, idxb, axis=1)           # (D, Sd*Lp*page, *)
+    ok = (tbl >= 0)[..., None] & jnp.ones((page,), bool)  # (D, Sd, Lp, page)
+    okb = ok.reshape((D, Sd * Lp * page) + (1,) * len(tail))
+    out = jnp.where(okb, out, jnp.zeros((), leaf.dtype))
+    return out.reshape((S, Lp * page) + tail)
+
+
+def scatter_ring(leaf: jax.Array, dense: jax.Array,
+                 state: PageState) -> jax.Array:
+    """Write a dense ring leaf back into its pages (inverse of gather).
+
+    dense (S, Lp*page, *tail) -> updated leaf (P, page, *tail). Rows not
+    covered by an owned page are dropped (they are zeros by the gather
+    contract); free pages keep their old bytes.
+    """
+    D = state.shards
+    P, page = int(leaf.shape[0]), int(leaf.shape[1])
+    S = int(dense.shape[0])
+    size = int(dense.shape[1])
+    Lp = size // page
+    tail = leaf.shape[2:]
+    Pn = _split(P, D, "num_pages")
+    Sd = _split(S, D, "num_slots")
+    dn = dense.reshape((D, Sd * size) + tail)
+    own = state.owner_slot.reshape(D, Pn)
+    lp = state.owner_lp.reshape(D, Pn)
+    sloc = own - (jnp.arange(D, dtype=jnp.int32) * Sd)[:, None]
+    rows = (jnp.clip(sloc, 0, Sd - 1) * size
+            + jnp.clip(lp, 0, Lp - 1) * page)[..., None] \
+        + jnp.arange(page, dtype=jnp.int32)               # (D, Pn, page)
+    idx = rows.reshape(D, Pn * page)
+    idxb = idx.reshape(idx.shape + (1,) * len(tail))
+    vals = jnp.take_along_axis(dn, idxb, axis=1)          # (D, Pn*page, *)
+    owned = (own >= 0)[..., None] & jnp.ones((page,), bool)
+    ownb = owned.reshape((D, Pn * page) + (1,) * len(tail))
+    kp = leaf.reshape((D, Pn * page) + tail)
+    out = jnp.where(ownb, vals, kp)
+    return out.reshape((P, page) + tail)
+
+
+def write_slot_pages(leaf: jax.Array, src: jax.Array, slot: jax.Array,
+                     state: PageState) -> jax.Array:
+    """Install a batch=1 dense ring into the pages owned by ``slot``.
+
+    leaf (nl, P, page, *tail); src (nl, 1, Lp*page, *tail) — a freshly
+    prefilled (replicated) request cache. Every page owned by ``slot`` is
+    overwritten in full, so stale bytes from a prior owner never leak.
+    Shard-local: src is replicated and the owner vectors are sharded, so
+    the select writes only the owning shard's block.
+    """
+    nl, P, page = int(leaf.shape[0]), int(leaf.shape[1]), int(leaf.shape[2])
+    tail = leaf.shape[3:]
+    Lp = int(src.shape[2]) // page
+    vals = src[:, 0].reshape((nl, Lp, page) + tail)
+    sel = jnp.take(vals, jnp.clip(state.owner_lp, 0, Lp - 1),
+                   axis=1)                                # (nl, P, page, *)
+    mine = (state.owner_slot == slot).reshape(
+        (1, P) + (1,) * (leaf.ndim - 2))
+    return jnp.where(mine, sel, leaf)
+
+
+def corrupt_slot_pages(leaf: jax.Array, slot: jax.Array,
+                       state: PageState) -> jax.Array:
+    """NaN every page owned by ``slot`` (chaos-harness fault injection)."""
+    mine = (state.owner_slot == slot).reshape(
+        (1, int(leaf.shape[1])) + (1,) * (leaf.ndim - 2))
+    return jnp.where(mine, jnp.full((), jnp.nan, leaf.dtype), leaf)
+
+
+def write_zero_pages(leaf: jax.Array, slot: jax.Array,
+                     state: PageState) -> jax.Array:
+    """Zero every page owned by ``slot`` (eviction/quarantine reset) —
+    freed pages hand their next owner zeros, never a prior slot's bytes
+    (in particular never an injected NaN)."""
+    mine = (state.owner_slot == slot).reshape(
+        (1, int(leaf.shape[1])) + (1,) * (leaf.ndim - 2))
+    return jnp.where(mine, jnp.zeros((), leaf.dtype), leaf)
+
+
+def pages_finite(leaves, state: PageState, num_slots: int) -> jax.Array:
+    """(S,) bool: True where every page owned by that slot is finite.
+
+    Per-page reduce then shard-explicit owner attribution — free pages
+    (possibly holding stale NaN from a quarantined owner) never count
+    against any live slot.
+    """
+    D = state.shards
+    P = state.num_pages
+    Pn = _split(P, D, "num_pages")
+    Sd = _split(num_slots, D, "num_slots")
+    okp = jnp.ones((P,), bool)
+    for leaf in leaves:
+        red = tuple(i for i in range(leaf.ndim) if i != 1)
+        okp = okp & jnp.all(jnp.isfinite(leaf), axis=red)
+    own = state.owner_slot.reshape(D, Pn)
+    bad = own[:, None, :] == (
+        (jnp.arange(D, dtype=jnp.int32) * Sd)[:, None]
+        + jnp.arange(Sd, dtype=jnp.int32))[..., None]     # (D, Sd, Pn)
+    bad = jnp.any(bad & ~okp.reshape(D, 1, Pn), axis=-1)
+    return ~bad.reshape(num_slots)
+
+
+# ---------------------------------------------------------------------------
+# Host-side allocator
+# ---------------------------------------------------------------------------
+
+
+class PagePool:
+    """Free-list page allocator with numpy mirrors of the device tables.
+
+    Static geometry for the engine's lifetime: ``num_pages`` physical
+    pages of ``page_size`` rows, split into D contiguous shard blocks
+    aligned with the slot pool's shard blocks (DESIGN.md §8). A slot is
+    only ever given pages from its own shard's block — the invariant the
+    shard-explicit device indexing above relies on.
+
+    All mutation is host-side and O(pages touched); the engine pushes the
+    updated mirrors to the jitted slot ops as traced args (static shapes,
+    so no recompiles).
+    """
+
+    def __init__(self, num_slots: int, num_pages: int, page_size: int,
+                 pages_per_slot: int, *, shards: int = 1):
+        if page_size <= 0:
+            raise ValueError("page_size must be positive")
+        if num_pages % max(shards, 1):
+            raise ValueError(
+                f"num_pages={num_pages} not divisible by shards={shards}")
+        if num_slots % max(shards, 1):
+            raise ValueError(
+                f"num_slots={num_slots} not divisible by shards={shards}")
+        self.num_slots = num_slots
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self.pages_per_slot = pages_per_slot
+        self.shards = max(int(shards), 1)
+        self._pn = num_pages // self.shards
+        self._sd = num_slots // self.shards
+        self.table = np.full((num_slots, pages_per_slot), -1, np.int32)
+        self.owner_slot = np.full((num_pages,), -1, np.int32)
+        self.owner_lp = np.full((num_pages,), -1, np.int32)
+        # Per-shard sorted free lists (lowest page id first: deterministic).
+        self.free: list[list[int]] = [
+            list(range(d * self._pn, (d + 1) * self._pn))
+            for d in range(self.shards)]
+        self.pages_peak = 0
+
+    # -- queries ---------------------------------------------------------
+
+    def shard_of(self, slot: int) -> int:
+        return slot // self._sd
+
+    def pages_for(self, need_rows: int) -> int:
+        """Pages required to hold ``need_rows`` ring rows (capped at the
+        per-slot table width)."""
+        n = -(-max(int(need_rows), 1) // self.page_size)
+        return min(n, self.pages_per_slot)
+
+    def pages_in_use(self) -> int:
+        return self.num_pages - sum(len(f) for f in self.free)
+
+    def free_in_shard(self, shard: int) -> int:
+        return len(self.free[shard])
+
+    def can_alloc(self, slot: int, need_rows: int) -> bool:
+        return self.pages_for(need_rows) <= len(self.free[
+            self.shard_of(slot)])
+
+    def slot_pages(self, slot: int) -> list[int]:
+        return [int(p) for p in self.table[slot] if p >= 0]
+
+    # -- mutation --------------------------------------------------------
+
+    def alloc(self, slot: int, need_rows: int) -> list[int]:
+        """Assign pages_for(need_rows) pages to ``slot`` from its shard's
+        free list. The slot must hold no pages (admission is whole-slot)."""
+        if self.table[slot].max(initial=-1) >= 0:
+            raise RuntimeError(f"slot {slot} already holds pages")
+        n = self.pages_for(need_rows)
+        shard = self.shard_of(slot)
+        if n > len(self.free[shard]):
+            raise RuntimeError(
+                f"shard {shard} has {len(self.free[shard])} free pages, "
+                f"need {n}")
+        got = self.free[shard][:n]
+        del self.free[shard][:n]
+        for j, p in enumerate(got):
+            if self.owner_slot[p] >= 0:      # pragma: no cover — invariant
+                raise RuntimeError(f"page {p} double-assigned")
+            self.table[slot, j] = p
+            self.owner_slot[p] = slot
+            self.owner_lp[p] = j
+        self.pages_peak = max(self.pages_peak, self.pages_in_use())
+        return got
+
+    def free_slot(self, slot: int) -> int:
+        """Return all of ``slot``'s pages to its shard's free list."""
+        shard = self.shard_of(slot)
+        n = 0
+        for j in range(self.pages_per_slot):
+            p = int(self.table[slot, j])
+            if p < 0:
+                continue
+            self.table[slot, j] = -1
+            self.owner_slot[p] = -1
+            self.owner_lp[p] = -1
+            self.free[shard].append(p)
+            n += 1
+        self.free[shard].sort()
+        return n
+
+    def device_vectors(self) -> PageState:
+        """Snapshot the mirrors as a device PageState (traced jit args)."""
+        return PageState(jnp.asarray(self.table),
+                         jnp.asarray(self.owner_slot),
+                         jnp.asarray(self.owner_lp), shards=self.shards)
+
+    def check(self) -> None:
+        """Invariant audit (tests/chaos): free + owned partitions pages,
+        table and owner vectors agree, shard blocks respected."""
+        seen: set[int] = set()
+        for d, fl in enumerate(self.free):
+            for p in fl:
+                assert d * self._pn <= p < (d + 1) * self._pn, (d, p)
+                assert self.owner_slot[p] == -1, p
+                assert p not in seen, p
+                seen.add(p)
+        for s in range(self.num_slots):
+            for j in range(self.pages_per_slot):
+                p = int(self.table[s, j])
+                if p < 0:
+                    continue
+                d = self.shard_of(s)
+                assert d * self._pn <= p < (d + 1) * self._pn, (s, p)
+                assert self.owner_slot[p] == s, (s, j, p)
+                assert self.owner_lp[p] == j, (s, j, p)
+                assert p not in seen, p
+                seen.add(p)
+        assert len(seen) == self.num_pages, (len(seen), self.num_pages)

@@ -1,0 +1,195 @@
+"""Content-addressed prefix cache: admit shared prompts by state copy.
+
+Production traffic is dominated by shared system prompts. In SLAY's
+linear-time regime a prompt prefix is a *single constant-size (S, z)
+state snapshot* (PAPER.md §3) — and the chunked-prefill continuation
+machinery (DESIGN.md §9: fp32 linear/SSM carries, exact yat ring-prefix
+continuation) means *any* decoder-only config can resume from a stored
+chunk-boundary snapshot. So the cache stores batch=1 ``DecodeCache``
+snapshots keyed by the sha256 of the prompt-token prefix:
+
+* **Keying.** ``(length, sha256(int32 prefix bytes))``. The raw tokens
+  are stored alongside and compared on lookup, so a digest collision can
+  never false-hit (the digest function is injectable for exactly that
+  test). Proper-prefix entries are only stored/served at chunk-size
+  multiples — that keeps the suffix's chunk schedule identical to a cold
+  prefill of the same prompt, which is what makes cached-vs-cold streams
+  *byte*-identical (same fp op order), not just statistically equal.
+* **Full-prompt entries** also carry the last-token logits, so a full
+  hit skips prefill entirely: the engine seeds the slot from the
+  snapshot and samples token 0 from the stored logits (sampling is keyed
+  on (seed, rid, index) — never on how the state was produced).
+* **Eviction.** LRU under ``capacity_bytes``; entries referenced by a
+  live request (``refs > 0``) are never evicted.
+
+The cache is a plain host-side object and can be shared across engines
+(e.g. a warm-up pass populating it for a measured run — how the bench's
+``prefix_cached`` rows get a 1.0 hit rate).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def token_digest(tokens: np.ndarray) -> bytes:
+    """sha256 over the canonical int32 little-endian token bytes."""
+    a = np.ascontiguousarray(np.asarray(tokens, dtype="<i4"))
+    return hashlib.sha256(a.tobytes()).digest()
+
+
+def tree_bytes(tree) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))
+
+
+def tree_copy(tree):
+    """Deep device copy — snapshots must not alias buffers the engine's
+    donating jits (``_chunk_fn``) are about to invalidate."""
+    return jax.tree.map(jnp.copy, tree)
+
+
+@dataclasses.dataclass
+class PrefixEntry:
+    length: int                       # tokens covered by this snapshot
+    tokens: np.ndarray                # (length,) int32 — collision check
+    cache: object                     # batch=1 DecodeCache snapshot
+    logits: object | None             # (1, 1, V) last-token logits
+    nbytes: int
+    refs: int = 0                     # live requests seeded from this
+    stamp: int = 0                    # LRU clock
+
+
+class PrefixCache:
+    """LRU-bounded, refcounted map: prompt-prefix hash -> state snapshot."""
+
+    def __init__(self, capacity_bytes: int,
+                 digest_fn: Callable[[np.ndarray], bytes] = token_digest):
+        self.capacity_bytes = int(capacity_bytes)
+        self._digest = digest_fn
+        self._entries: dict[tuple[int, bytes], PrefixEntry] = {}
+        self._clock = 0
+        self.hits = 0
+        self.misses = 0
+        self.tokens_reused = 0
+        self.evictions = 0
+
+    # -- bookkeeping -----------------------------------------------------
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    @property
+    def nbytes(self) -> int:
+        return sum(e.nbytes for e in self._entries.values())
+
+    def _tick(self) -> int:
+        self._clock += 1
+        return self._clock
+
+    # -- lookup ----------------------------------------------------------
+
+    def lookup(self, tokens, *, chunk: int) -> PrefixEntry | None:
+        """Longest cached prefix of ``tokens``, or None (counts a miss).
+
+        Candidates: the full prompt, then chunk-size multiples descending
+        (proper prefixes at other lengths are never served — the suffix
+        chunk schedule must match a cold prefill's). Tokens are compared
+        outright on digest match, so a collision cannot false-hit.
+        """
+        toks = np.asarray(tokens, np.int32).reshape(-1)
+        n = len(toks)
+        cands = [n]
+        if chunk > 0:
+            top = ((n - 1) // chunk) * chunk
+            cands += list(range(top, 0, -chunk))
+        for ln in cands:
+            e = self._entries.get((ln, self._digest(toks[:ln])))
+            if e is None or not np.array_equal(e.tokens, toks[:ln]):
+                continue
+            if ln == n and e.logits is None:
+                # A full-length entry without stored logits cannot serve a
+                # full hit (no way to sample token 0); fall through to the
+                # proper-prefix candidates instead.
+                continue
+            e.stamp = self._tick()
+            self.hits += 1
+            self.tokens_reused += ln
+            return e
+        self.misses += 1
+        return None
+
+    def acquire(self, entry: PrefixEntry) -> None:
+        entry.refs += 1
+
+    def release(self, entry: PrefixEntry) -> None:
+        entry.refs = max(entry.refs - 1, 0)
+
+    # -- insert / evict --------------------------------------------------
+
+    def insert(self, tokens, cache, *, logits=None, copy: bool = True
+               ) -> PrefixEntry | None:
+        """Store a snapshot of the state after absorbing ``tokens``.
+
+        ``copy=True`` deep-copies the cache/logits (callers inside the
+        engine hold buffers that the next donating dispatch invalidates).
+        Returns the entry, or None if it cannot fit the budget even after
+        evicting every unreferenced entry. An existing identical key just
+        refreshes its LRU stamp (first snapshot wins — entries for the
+        same (length, digest) are byte-identical by construction).
+        """
+        toks = np.asarray(tokens, np.int32).reshape(-1)
+        key = (len(toks), self._digest(toks))
+        if key in self._entries:
+            e = self._entries[key]
+            e.stamp = self._tick()
+            if e.logits is None and logits is not None:
+                # Upgrade a proper-prefix entry (stored without logits by
+                # a longer prompt) into a full-hit-capable one.
+                lg = jnp.copy(logits) if copy else logits
+                e.logits = lg
+                e.nbytes += tree_bytes(lg)
+            return e
+        if copy:
+            cache = tree_copy(cache)
+            logits = None if logits is None else jnp.copy(logits)
+        nbytes = tree_bytes(cache) + (0 if logits is None
+                                      else tree_bytes(logits))
+        if not self._make_room(nbytes):
+            return None
+        e = PrefixEntry(len(toks), toks.copy(), cache, logits, nbytes,
+                        stamp=self._tick())
+        self._entries[key] = e
+        return e
+
+    def _make_room(self, nbytes: int) -> bool:
+        if self.capacity_bytes <= 0:
+            return False
+        while self.nbytes + nbytes > self.capacity_bytes:
+            victims = [e for e in self._entries.values() if e.refs == 0]
+            if not victims:
+                return False
+            victim = min(victims, key=lambda e: e.stamp)
+            for k, v in list(self._entries.items()):
+                if v is victim:
+                    del self._entries[k]
+                    self.evictions += 1
+                    break
+        return True
+
+    # -- metrics ---------------------------------------------------------
+
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def stats(self) -> dict:
+        return {"entries": len(self), "bytes": self.nbytes,
+                "hits": self.hits, "misses": self.misses,
+                "hit_rate": self.hit_rate(),
+                "tokens_reused": self.tokens_reused,
+                "evictions": self.evictions}

@@ -3,7 +3,9 @@ exact quadratic yat kinds (DESIGN.md §9): SSD ragged-tail regression vs a
 loop oracle, chunked-vs-whole-prompt parity across ragged chunk schedules
 for ssm/hybrid and yat, serving-engine stream equality between the new
 chunked path and the retired bucketed fallback, and the admission-time
-vision-prefix cap."""
+vision-prefix capacity rules — bounded rings still reject oversized
+prompts, while unbounded (linear) vision configs absorb the patch prefix
+chunk-by-chunk instead (DESIGN.md §11)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -158,14 +160,11 @@ def test_hybrid_kv_ring_chunked_prefill_parity():
 
 @pytest.mark.serving
 def test_prefill_chunk_gate_errors_name_the_gate():
-    """The NotImplementedError names which gate failed — frontend for the
-    vision-prefix decoder, family for encdec — not just the attn kind."""
+    """Only encdec still gates chunked prefill, and its error names the
+    family. Vision decoders chunk now — the patch prefix feeds through
+    ``prefill_chunk(embeds=)`` (DESIGN.md §11)."""
     cfg = configs.get_smoke_config("internvl2-76b")
-    assert not api.supports_chunked_prefill(cfg)
-    params = api.init_params(cfg, jax.random.PRNGKey(0))
-    cache = api.init_cache(cfg, 1, 32)
-    with pytest.raises(NotImplementedError, match="frontend='vision'"):
-        api.prefill_chunk(cfg, params, cache, jnp.zeros((1, 4), jnp.int32))
+    assert api.supports_chunked_prefill(cfg)
 
     wcfg = configs.get_smoke_config("whisper-small")
     assert not api.supports_chunked_prefill(wcfg)
@@ -176,11 +175,11 @@ def test_prefill_chunk_gate_errors_name_the_gate():
 @pytest.mark.serving
 def test_every_decoder_only_config_is_chunkable():
     """Acceptance: supports_chunked_prefill is True for every decoder-only
-    config (ssm, hybrid, every attn kind); only frontends/encdec fall
-    back."""
+    config (ssm, hybrid, every attn kind, vision frontends); only encdec
+    falls back."""
     for name in configs.ALL_ARCHS:
         cfg = configs.get_smoke_config(name)
-        want = cfg.family != "encdec" and not cfg.frontend
+        want = cfg.family != "encdec"
         assert api.supports_chunked_prefill(cfg) == want, name
     for kind in ("slay", "softmax", "yat", "yat_spherical", "favor",
                  "elu1", "cosformer"):
@@ -262,9 +261,12 @@ def test_engine_yat_chunked_vs_bucketed_fallback_streams(mesh):
 @pytest.mark.serving
 def test_vision_prefix_cap_rejected_at_admission(mesh):
     """A prompt that fits max_len alone but not with the vision patch
-    prefix must be rejected at submit() — previously the padded bucket
-    slice silently dropped the prompt tail."""
-    cfg = configs.get_smoke_config("internvl2-76b")   # num_patches=8
+    prefix must be rejected at submit() when the ring is bounded (softmax
+    backend) — previously the padded bucket slice silently dropped the
+    prompt tail."""
+    cfg = configs.get_smoke_config("internvl2-76b",
+                                   attn_kind="softmax")  # num_patches=8
+    assert api.context_capacity(cfg, 32) is not None
     params = api.init_params(cfg, jax.random.PRNGKey(0))
     eng = ContinuousServingEngine(
         cfg, params, mesh,
@@ -277,3 +279,32 @@ def test_vision_prefix_cap_rejected_at_admission(mesh):
     outs, summary = eng.run([Request(fit, max_new_tokens=4)])
     assert summary["requests_completed"] == 1
     assert len(outs[0]) == 4
+
+
+@pytest.mark.serving
+def test_oversized_vision_prompt_served_by_chunked_absorption(mesh):
+    """Regression (DESIGN.md §11): the same over-budget request on the
+    *linear* backend (constant-state: capacity unbounded) used to be
+    rejected too; it now admits, absorbs the patch prefix + prompt
+    chunk-by-chunk, and streams exactly what a roomy lockstep reference
+    produces. Without chunked prefill the one-shot fallback still cannot
+    exceed the ring, so admission keeps rejecting there."""
+    cfg = configs.get_smoke_config("internvl2-76b")   # slay: linear
+    assert api.context_capacity(cfg, 32) is None
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    over = np.ones(32 - 4 - cfg.num_patches + 1, np.int32)  # 1 over budget
+    eng = ContinuousServingEngine(
+        cfg, params, mesh,
+        serving=ServingConfig(num_slots=1, max_len=32, prefill_chunk=4))
+    outs, summary = eng.run([Request(over, max_new_tokens=4)])
+    assert summary["requests_completed"] == 1
+    ref = ServingEngine(cfg, params, mesh, max_len=64)
+    want = ref.generate([Request(over, max_new_tokens=4)])[0]
+    np.testing.assert_array_equal(outs[0], want)
+    # Chunked prefill is what makes the unbounded admission safe: with it
+    # disabled the full-length one-shot prefill would overflow the ring.
+    eng0 = ContinuousServingEngine(
+        cfg, params, mesh,
+        serving=ServingConfig(num_slots=1, max_len=32, prefill_chunk=0))
+    with pytest.raises(ValueError, match="vision-prefix"):
+        eng0.submit(Request(over, max_new_tokens=4))

@@ -374,7 +374,9 @@ def test_serving_bench_smoke_emits_json(tmp_path, monkeypatch):
     assert len({ld for _, ld in loads}) >= 2          # >= 2 load levels
     assert {rg for rg, _ in loads} == {"constant_state", "kv_ring",
                                        "ssm_scan", "hybrid_scan",
-                                       "constant_state_sharded"}
+                                       "constant_state_sharded",
+                                       "kv_ring_paged", "prefix_cold",
+                                       "prefix_cached"}
     # Scan-carry families serve via chunked prefill — fallback retired.
     for r in rows:
         if r["regime"] in ("ssm_scan", "hybrid_scan"):
@@ -389,3 +391,16 @@ def test_serving_bench_smoke_emits_json(tmp_path, monkeypatch):
     base = next(r for r in rows if r["regime"] == "constant_state"
                 and r["load"] == sharded["load"])
     assert sharded["stream_digest"] == base["stream_digest"]
+    # §11 byte-identity: the paged row replays the kv_ring trace, and the
+    # prefix-cached replay full-hits every request of the cold run.
+    paged = next(r for r in rows if r["regime"] == "kv_ring_paged")
+    ring = next(r for r in rows if r["regime"] == "kv_ring"
+                and r["load"] == paged["load"])
+    assert paged["stream_digest"] == ring["stream_digest"]
+    assert paged["pages_peak"] >= 1 and paged["final_pages_in_use"] == 0
+    cold = next(r for r in rows if r["regime"] == "prefix_cold")
+    warm = next(r for r in rows if r["regime"] == "prefix_cached")
+    assert warm["stream_digest"] == cold["stream_digest"]
+    assert cold["prefix_hit_rate"] == 0.0
+    assert warm["prefix_hit_rate"] == 1.0
+    assert warm["ttft_ticks_p50"] < cold["ttft_ticks_p50"]

@@ -96,13 +96,25 @@ def test_reject_new_raises_typed_queue_full(setup):
 
 
 def test_too_large_is_admission_and_value_error(setup):
+    """Bounded (KV ring) configs reject oversized requests with the typed
+    error; constant-state configs have unbounded capacity (DESIGN.md §11)
+    and only reject when chunked prefill is off (the one-shot fallback
+    prefill cannot exceed the ring)."""
     cfg, params, mesh = setup
-    eng = _engine(cfg, params, mesh)
-    bad = Request(_prompt(cfg, 8), max_new_tokens=1000)
+    bcfg = configs.get_smoke_config("slayformer-124m", attn_kind="softmax")
+    bparams = api.init_params(bcfg, jax.random.PRNGKey(0))
+    eng = _engine(bcfg, bparams, mesh)
+    bad = Request(_prompt(bcfg, 8), max_new_tokens=1000)
     with pytest.raises(RequestTooLargeError) as ei:
         eng.submit(bad)
     assert isinstance(ei.value, AdmissionError)
     assert isinstance(ei.value, ValueError)   # pre-§10 contract preserved
+    # The linear (constant-state) setup config admits the same request —
+    # its decode state is O(1) in context — unless chunked prefill is off.
+    assert api.context_capacity(cfg, 64) is None
+    eng2 = _engine(cfg, params, mesh, prefill_chunk=0)
+    with pytest.raises(RequestTooLargeError):
+        eng2.submit(bad)
 
 
 def test_shed_oldest_at_queue_boundary(setup):

@@ -1,0 +1,133 @@
+#!/usr/bin/env python3
+"""Bench-regression gate: diff BENCH_serving.json against the committed
+baseline (``benchmarks/baseline/BENCH_serving.json``) and fail on
+regressions in the backend-independent tick metrics.
+
+Only *tick-domain* metrics are gated — they are deterministic functions of
+the seeded trace and the scheduling code, so they are trendable on any
+backend (CI runs CPU smoke). Wall-clock metrics (``*_per_s``) are noisy on
+CPU and stay ungated (inspectable from the uploaded artifact instead).
+
+Per-metric tolerance: a row regresses when it is worse than baseline by
+more than ``max(rel_tol * baseline, abs_floor)`` in the metric's bad
+direction. The tolerances absorb minor scheduling shifts; a deliberate
+change that moves a gated metric re-baselines instead:
+
+    PYTHONPATH=src python -m benchmarks.run --suite serving --smoke
+    python tools/check_bench.py --update
+
+and commits the refreshed baseline alongside the change that moved it.
+Chaos rows are skipped (degraded-mode rates are asserted by the chaos
+contract step, not trended here). A row present in the baseline but
+missing from the current run fails (a silently dropped regime is itself a
+regression); a new row not yet in the baseline passes with a note.
+
+Exit status: 0 = no regressions, 1 = regression or missing row.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+_CURRENT = os.path.join(_REPO, "BENCH_serving.json")
+_BASELINE = os.path.join(_REPO, "benchmarks", "baseline",
+                         "BENCH_serving.json")
+
+# metric -> (better, rel_tol, abs_floor). "higher"/"lower" is the GOOD
+# direction; improvement is never flagged.
+_METRICS = {
+    "tokens_per_dispatch": ("higher", 0.10, 0.25),
+    "host_syncs_per_token": ("lower", 0.10, 0.005),
+    "mean_slot_occupancy": ("higher", 0.10, 0.02),
+    "ttft_ticks_p50": ("lower", 0.15, 2.0),
+    "ttft_ticks_p95": ("lower", 0.15, 2.0),
+}
+
+
+def _rows(payload: dict) -> dict:
+    """(regime, load) -> row, chaos rows excluded (not trended here)."""
+    return {(r["regime"], r["load"]): r for r in payload["results"]
+            if not r["regime"].startswith("chaos")}
+
+
+def _check_metric(metric: str, base: float, cur: float) -> tuple[str, float]:
+    """-> (status, delta). status: 'ok' | 'better' | 'REGRESSION'."""
+    better, rel, floor = _METRICS[metric]
+    tol = max(rel * abs(base), floor)
+    delta = cur - base
+    worse = delta < -tol if better == "higher" else delta > tol
+    improved = delta > tol if better == "higher" else delta < -tol
+    return ("REGRESSION" if worse else "better" if improved else "ok",
+            delta)
+
+
+def compare(baseline: dict, current: dict) -> tuple[list[str], bool]:
+    """-> (markdown table lines, any_regression)."""
+    base_rows, cur_rows = _rows(baseline), _rows(current)
+    lines = ["| regime | load | metric | baseline | current | Δ | status |",
+             "|---|---|---|---|---|---|---|"]
+    bad = False
+    for key in sorted(base_rows, key=str):
+        regime, load = key
+        if key not in cur_rows:
+            lines.append(f"| {regime} | {load:g} | — | — | — | — | "
+                         f"**MISSING ROW** |")
+            bad = True
+            continue
+        for metric in _METRICS:
+            b, c = base_rows[key].get(metric), cur_rows[key].get(metric)
+            if b is None or c is None:
+                continue       # e.g. a regime with no TTFT percentile
+            status, delta = _check_metric(metric, float(b), float(c))
+            if status == "REGRESSION":
+                bad = True
+            if status != "ok":
+                status = (f"**{status}**" if status == "REGRESSION"
+                          else status)
+            lines.append(f"| {regime} | {load:g} | {metric} | {b:.4g} | "
+                         f"{c:.4g} | {delta:+.4g} | {status} |")
+    for key in sorted(set(cur_rows) - set(base_rows), key=str):
+        lines.append(f"| {key[0]} | {key[1]:g} | — | — | — | — | "
+                     f"new row (not in baseline) |")
+    return lines, bad
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--current", default=_CURRENT,
+                    help="bench JSON from this run")
+    ap.add_argument("--baseline", default=_BASELINE,
+                    help="committed baseline JSON")
+    ap.add_argument("--update", action="store_true",
+                    help="overwrite the baseline with --current "
+                         "(re-baselining a deliberate change)")
+    args = ap.parse_args(argv)
+    if args.update:
+        os.makedirs(os.path.dirname(args.baseline), exist_ok=True)
+        shutil.copyfile(args.current, args.baseline)
+        print(f"baseline updated: {args.baseline}")
+        return 0
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.current) as f:
+        current = json.load(f)
+    lines, bad = compare(baseline, current)
+    table = "\n".join(lines)
+    verdict = ("bench regression vs baseline — see table; if deliberate, "
+               "re-baseline with tools/check_bench.py --update"
+               if bad else "bench metrics within tolerance of baseline")
+    print(f"## Serving bench vs baseline\n\n{table}\n\n{verdict}")
+    step = os.environ.get("GITHUB_STEP_SUMMARY")
+    if step:       # surfaced on the workflow run page
+        with open(step, "a") as f:
+            f.write(f"## Serving bench vs baseline\n\n{table}\n\n"
+                    f"{verdict}\n")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
