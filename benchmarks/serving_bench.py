@@ -52,7 +52,13 @@ a ``chaos_overload`` row drives an all-at-once burst through the
 ``shed_oldest`` overload policy with one impossible deadline, measuring
 shed and deadline-miss rates. The CI ``chaos-serving`` step asserts the
 leak contract (``final_occupancy == 0``) and ``fault_retries_succeeded
->= 1`` from these rows.
+>= 1`` from these rows. ``--chaos`` also runs the crash-recovery drills
+(DESIGN.md §12): per decode regime, a journaled + checkpointed engine is
+killed mid-flight by the seeded crash injector, restored from disk, and
+driven to completion — ``crash_recovery_*`` rows record recovery wall
+time, tokens replayed through the journal-dedup horizon, journal bytes
+per token, and the ``streams_byte_identical`` flag the CI crash contract
+step asserts (alongside zero leaked slots/pages).
 
     PYTHONPATH=src python -m benchmarks.run --suite serving
     PYTHONPATH=src python -m benchmarks.run --suite serving --smoke
@@ -66,6 +72,7 @@ import json
 import os
 import subprocess
 import sys
+import tempfile
 
 import jax
 import numpy as np
@@ -75,8 +82,10 @@ from repro import configs
 from repro.configs.base import ServingConfig
 from repro.launch.mesh import make_host_mesh
 from repro.models import api
+from repro.serving import journal as journal_lib
 from repro.serving.engine import ContinuousServingEngine, Request
-from repro.serving.faults import FaultInjector, detection_latencies
+from repro.serving.faults import (EngineCrash, FaultInjector,
+                                  detection_latencies)
 from repro.serving.prefix_cache import PrefixCache
 
 _JSON_PATH = os.path.join(os.path.dirname(os.path.dirname(
@@ -321,6 +330,89 @@ def _chaos_rows(cfg, params, mesh, p: dict, load: float, base_outs: dict,
             extra={"regime": "chaos_overload", "load": load}))
 
 
+def _crash_recovery_rows(mesh, p: dict, load: float, regimes, results,
+                         rows):
+    """Crash-recovery drills (DESIGN.md §12): kill-and-restore per regime.
+
+    Each regime's exact Poisson trace replays against a journaled +
+    periodically-checkpointed engine; the seeded crash injector kills the
+    process state mid-flight (an exception with no flush and no cleanup —
+    the host dies with dirty buffers, a fair stand-in for ``kill -9``);
+    the engine then restores from disk and finishes. Asserted here and
+    re-asserted from the JSON by the CI chaos contract step:
+
+    * ``streams_byte_identical`` — the merged restored streams' digest
+      equals the fault-free row's (the §12 byte-identity contract),
+    * ``tokens_replayed > 0`` — the crash landed mid-stream, so recovery
+      actually regenerated and deduped journaled tokens (a vacuous drill
+      that crashed before any emission would pass identity for free),
+    * zero leaked slots/pages/queue entries after the recovered drain.
+
+    Recovery cost shows up as ``recovery_wall_s`` (journal replay +
+    checkpoint load + re-prefill on the restore path) and
+    ``journal_bytes_per_token`` (durability overhead per emitted token).
+    """
+    for name, cfg, params, page_size in regimes:
+        base_row = next(r for r in rows if r["regime"] == name
+                        and r["load"] == load)
+        sv = ServingConfig(num_slots=p["num_slots"], max_len=p["max_len"],
+                           prefill_chunk=p["prefill_chunk"],
+                           macro_ticks=_MACRO_TICKS, page_size=page_size,
+                           checkpoint_every_ticks=_MACRO_TICKS)
+        reqs = _poisson_trace(np.random.default_rng(1234), p["n"], load,
+                              p["prompt"], cfg.vocab_size, p["max_new"])
+        with tempfile.TemporaryDirectory(prefix="slay-crash-") as d:
+            jr = journal_lib.Journal(
+                os.path.join(d, journal_lib.JOURNAL_NAME))
+            inj = FaultInjector(seed=808, crash_window=(10, 16))
+            eng = ContinuousServingEngine(cfg, params, mesh, serving=sv,
+                                          fault_injector=inj, journal=jr)
+            crash_tick = None
+            try:
+                eng.run(reqs)
+            except EngineCrash as e:
+                crash_tick = e.tick
+            assert crash_tick is not None, \
+                f"{name}: crash injector never fired (trace too short?)"
+            eng2 = ContinuousServingEngine.restore(d, cfg, params, mesh,
+                                                   serving=sv)
+            rec = eng2.recovery
+            outs, s2 = eng2.run()
+        identical = _stream_digest(outs) == base_row["stream_digest"]
+        assert identical, f"{name}: restored streams diverged"
+        assert s2["tokens_replayed"] > 0, (name, s2["tokens_replayed"])
+        assert s2["final_occupancy"] == 0 == s2["final_queue_depth"], s2
+        assert s2["final_pages_in_use"] == 0, s2
+        regime = f"crash_recovery_{name}"
+        extra = {
+            "crash_tick": int(crash_tick),
+            "recovery_wall_s": float(rec["wall_s"]),
+            "checkpoint_used": bool(rec["checkpoint_used"]),
+            "checkpoint_tick": rec["checkpoint_tick"],
+            "resident_resumed": rec["resident_resumed"],
+            "requeued": rec["requeued"],
+            "terminal_from_journal": rec["terminal_from_journal"],
+            "journal_records": rec["journal_records"],
+            "journal_bytes_per_token":
+                s2["journal_bytes"] / max(s2["tokens_generated"], 1),
+            "streams_byte_identical": identical,
+        }
+        rows.append({"regime": regime, "load": load,
+                     "num_slots": p["num_slots"], "requests": p["n"],
+                     "stream_digest": _stream_digest(outs),
+                     **extra, **s2})
+        for key, unit in (("recovery_wall_s", "s"),
+                          ("journal_bytes_per_token", "bytes/tok")):
+            results.append(BenchResult(
+                f"serving/{regime}/load{load:g}/{key}",
+                float(extra[key]), unit,
+                extra={"regime": regime, "load": load}))
+        results.append(BenchResult(
+            f"serving/{regime}/load{load:g}/tokens_replayed",
+            float(s2["tokens_replayed"]), "tokens",
+            extra={"regime": regime, "load": load}))
+
+
 def run(quick: bool = True, smoke: bool = False, chaos: bool = False):
     p = _SMOKE if smoke else (_QUICK if quick else _FULL)
     mesh = make_host_mesh()
@@ -437,6 +529,15 @@ def run(quick: bool = True, smoke: bool = False, chaos: bool = False):
     if chaos:
         _chaos_rows(cs_cfg, cs_params, mesh, p, load, cs_outs,
                     results, rows)
+        # Crash-recovery drills (DESIGN.md §12): one kill-and-restore per
+        # decode regime, byte-identity asserted against the fault-free
+        # rows above (same trace, same load).
+        _crash_recovery_rows(
+            mesh, p, load,
+            [("constant_state", cs_cfg, cs_params, 0),
+             ("kv_ring", kv_cfg, kv_params, 0),
+             ("kv_ring_paged", kv_cfg, kv_params, p["page_size"])],
+            results, rows)
 
     payload = {
         "meta": {

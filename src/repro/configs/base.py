@@ -214,6 +214,15 @@ class ServingConfig:
     longest cached prompt-prefix snapshot and chunk-prefills only the
     suffix (LRU-evicted under this byte budget; streams stay
     byte-identical cached-vs-cold).
+
+    Durability (DESIGN.md §12): ``checkpoint_every_ticks > 0`` makes an
+    engine constructed with a write-ahead ``journal=`` also write an
+    atomic checkpoint every N engine ticks (at macro-step boundaries);
+    ``ContinuousServingEngine.restore`` resumes from the latest valid
+    one with byte-identical streams. ``debug_audit`` runs the invariant
+    audit (``PagePool.check()`` + prefix-cache refcounts == live pins) at
+    the end of every ``run()`` — also forced on by the
+    ``REPRO_DEBUG_AUDIT`` env var (set for the test suite and chaos CI).
     """
 
     num_slots: int = 4
@@ -234,6 +243,8 @@ class ServingConfig:
     page_size: int = 0                # 0 = unpaged; else ring rows per page
     num_pages: int = 0                # 0 = auto (num_slots * max_len / page)
     prefix_cache_bytes: int = 0       # 0 = prefix cache off; else LRU budget
+    checkpoint_every_ticks: int = 0   # 0 = no periodic engine checkpoints
+    debug_audit: bool = False         # invariant audit at end of run()
 
     def __post_init__(self):
         if self.num_slots < 1:
@@ -273,6 +284,8 @@ class ServingConfig:
             raise ValueError("num_pages requires page_size > 0")
         if self.prefix_cache_bytes < 0:
             raise ValueError("prefix_cache_bytes must be >= 0")
+        if self.checkpoint_every_ticks < 0:
+            raise ValueError("checkpoint_every_ticks must be >= 0 (0 = off)")
 
 
 @dataclasses.dataclass(frozen=True)

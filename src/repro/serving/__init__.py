@@ -2,15 +2,20 @@
 constant-state decode paths, with a typed fault-tolerant request
 lifecycle (deadlines, cancellation, load-shedding, NaN quarantine —
 DESIGN.md §10), paged slot memory + a content-addressed prefix cache
-(DESIGN.md §11), and a deterministic chaos harness."""
+(DESIGN.md §11), crash-safe durability (write-ahead journal + atomic
+checkpoints + byte-identical restore — DESIGN.md §12), and a
+deterministic chaos harness."""
+from repro.serving.checkpoint import CheckpointError  # noqa: F401
 from repro.serving.engine import (AdmissionError,  # noqa: F401
                                   ContinuousServingEngine, EngineMetrics,
                                   QueueFullError, Request,
                                   RequestTooLargeError, Scheduler,
                                   ServingEngine, ServingMetrics,
                                   jit_serve_fns)
-from repro.serving.faults import FaultInjector  # noqa: F401
+from repro.serving.faults import EngineCrash, FaultInjector  # noqa: F401
+from repro.serving.journal import Journal, JournalState  # noqa: F401
 from repro.serving.pages import PagePool, PageState  # noqa: F401
 from repro.serving.prefix_cache import (PrefixCache,  # noqa: F401
                                         PrefixEntry)
-from repro.serving.sampling import FINISH_REASONS  # noqa: F401
+from repro.serving.sampling import (FINISH_REASONS,  # noqa: F401
+                                    STREAM_KEY_VERSION)

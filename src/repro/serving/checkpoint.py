@@ -1,0 +1,185 @@
+"""Atomic engine checkpoints for crash-safe serving (DESIGN.md §12).
+
+A checkpoint captures everything the journal does *not*: the device
+pool cache (including the ``PageState`` pytree when paging is on),
+host slot mirrors, scheduler residency (which rid owns which slot),
+``PagePool`` free lists, and the prefix-cache index.  Restore loads the
+latest valid checkpoint, then replays the journal suffix to rebuild
+queued requests and deduplicate already-emitted tokens.
+
+File format::
+
+    magic (8B) | version u32 | payload_len u64 | sha256(payload) 32B | payload
+
+The payload is a pickled dict of plain host objects (numpy arrays,
+lists, dicts) — device arrays are pulled via ``jax.device_get`` and the
+pool pytree is stored as a leaves list; restore rebuilds the structure
+from a freshly constructed engine's treedef, so no code objects are
+serialized.  Writes are atomic: tmp file + fsync + ``os.replace`` +
+directory fsync.  ``latest_valid`` scans ``ckpt-*.ckpt`` newest-first
+and skips files whose checksum/header fails, so a crash mid-checkpoint
+falls back to the previous checkpoint (or journal-only recovery).
+"""
+
+from __future__ import annotations
+
+import hashlib
+import os
+import pickle
+import re
+import struct
+
+import jax
+import numpy as np
+
+MAGIC = b"SLAYCKPT"
+CKPT_VERSION = 1
+_HEADER = struct.Struct("<8sIQ")
+_CKPT_RE = re.compile(r"^ckpt-(\d+)\.ckpt$")
+
+
+class CheckpointError(RuntimeError):
+    """Raised when a checkpoint file fails header/checksum validation."""
+
+
+def checkpoint_path(directory: str, tick: int) -> str:
+    return os.path.join(directory, f"ckpt-{tick:012d}.ckpt")
+
+
+def save(path: str, state: dict) -> None:
+    """Atomically write ``state`` to ``path`` (tmp + rename + fsync)."""
+    payload = pickle.dumps(state, protocol=4)
+    blob = (
+        _HEADER.pack(MAGIC, CKPT_VERSION, len(payload))
+        + hashlib.sha256(payload).digest()
+        + payload
+    )
+    d = os.path.dirname(path) or "."
+    os.makedirs(d, exist_ok=True)
+    tmp = f"{path}.tmp.{os.getpid()}"
+    with open(tmp, "wb") as f:
+        f.write(blob)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+    dirfd = os.open(d, os.O_RDONLY)
+    try:
+        os.fsync(dirfd)
+    finally:
+        os.close(dirfd)
+
+
+def load(path: str) -> dict:
+    """Load and validate one checkpoint file; raises CheckpointError."""
+    with open(path, "rb") as f:
+        blob = f.read()
+    if len(blob) < _HEADER.size + 32:
+        raise CheckpointError(f"{path}: truncated header")
+    magic, version, plen = _HEADER.unpack_from(blob)
+    if magic != MAGIC:
+        raise CheckpointError(f"{path}: bad magic {magic!r}")
+    if version != CKPT_VERSION:
+        raise CheckpointError(f"{path}: unsupported version {version}")
+    digest = blob[_HEADER.size : _HEADER.size + 32]
+    payload = blob[_HEADER.size + 32 :]
+    if len(payload) != plen:
+        raise CheckpointError(f"{path}: payload length {len(payload)} != {plen}")
+    if hashlib.sha256(payload).digest() != digest:
+        raise CheckpointError(f"{path}: checksum mismatch")
+    state = pickle.loads(payload)
+    if not isinstance(state, dict):
+        raise CheckpointError(f"{path}: payload is not a state dict")
+    return state
+
+
+def list_checkpoints(directory: str) -> list[tuple[int, str]]:
+    """All checkpoint files in ``directory`` as (tick, path), newest first."""
+    if not os.path.isdir(directory):
+        return []
+    out = []
+    for name in os.listdir(directory):
+        m = _CKPT_RE.match(name)
+        if m:
+            out.append((int(m.group(1)), os.path.join(directory, name)))
+    out.sort(reverse=True)
+    return out
+
+
+def latest_valid(directory: str) -> dict | None:
+    """Newest checkpoint that passes validation, or None."""
+    for _tick, path in list_checkpoints(directory):
+        try:
+            return load(path)
+        except (CheckpointError, OSError, pickle.UnpicklingError, EOFError):
+            continue  # corrupt/torn checkpoint: fall back to an older one
+    return None
+
+
+def snapshot_engine(eng) -> dict:
+    """Build the checkpoint state dict from a live engine.
+
+    Mid-prefill state is deliberately *not* captured: if a chunked
+    prefill is in flight, its slot's pages are freed in a cloned
+    ``PagePool`` snapshot and the request simply re-admits from its
+    journaled admission at restore (same chunk schedule, same stream).
+    """
+    pool_leaves = [np.asarray(x) for x in jax.device_get(jax.tree.leaves(eng.pool))]
+    mirrors = {
+        "last_tok": np.asarray(eng._last_tok).copy(),
+        "active": np.asarray(eng._active).copy(),
+        "rids": np.asarray(eng._rids).copy(),
+        "gen": np.asarray(eng._gen).copy(),
+        "eos": np.asarray(eng._eos).copy(),
+        "maxn": np.asarray(eng._maxn).copy(),
+    }
+    inflight_slot = eng._prefill.slot if eng._prefill is not None else None
+    page_snap = None
+    if eng.page_pool is not None:
+        pp = eng.page_pool
+        if inflight_slot is not None and pp.slot_pages(inflight_slot):
+            from repro.serving import pages as pages_lib
+
+            clone = pages_lib.PagePool(
+                pp.num_slots, pp.num_pages, pp.page_size,
+                pp.pages_per_slot, shards=pp.shards,
+            )
+            clone.load_snapshot(pp.snapshot())
+            clone.free_slot(inflight_slot)
+            page_snap = clone.snapshot()
+        else:
+            page_snap = pp.snapshot()
+    slots = {}
+    for slot, rec in eng.sched.active.items():
+        if slot == inflight_slot:
+            continue
+        slots[int(slot)] = int(rec.rid)
+    prefix_entries = None
+    if eng.prefix_cache is not None:
+        prefix_entries = []
+        for ent in eng.prefix_cache.entries():
+            prefix_entries.append(
+                {
+                    "tokens": np.asarray(ent.tokens, np.int32),
+                    "length": int(ent.length),
+                    "cache": [np.asarray(x) for x in jax.device_get(jax.tree.leaves(ent.cache))],
+                    "logits": (
+                        np.asarray(jax.device_get(ent.logits))
+                        if ent.logits is not None
+                        else None
+                    ),
+                }
+            )
+    return {
+        "version": CKPT_VERSION,
+        "tick": int(eng.tick),
+        "next_rid": int(eng._next_rid),
+        "num_slots": int(eng.serving.num_slots),
+        "max_len": int(eng.serving.max_len),
+        "page_size": int(eng.serving.page_size) if eng.page_pool is not None else 0,
+        "seed": int(eng.serving.seed),
+        "pool": pool_leaves,
+        "mirrors": mirrors,
+        "slots": slots,
+        "page_pool": page_snap,
+        "prefix": prefix_entries,
+    }

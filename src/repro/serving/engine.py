@@ -46,6 +46,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import functools
+import os
 import time
 from typing import Callable
 
@@ -56,6 +57,9 @@ import numpy as np
 from repro.configs.base import ArchConfig, ServingConfig
 from repro.distributed import sharding as shd
 from repro.models import api
+from repro.serving import checkpoint as checkpoint_lib
+from repro.serving import faults as faults_lib
+from repro.serving import journal as journal_lib
 from repro.serving import pages as pages_lib
 from repro.serving import prefix_cache as prefix_lib
 from repro.serving import sampling
@@ -404,10 +408,23 @@ class ServingMetrics:
     pages_peak: int = 0         # high-water mark of pages_in_use
     fault_events: list = dataclasses.field(  # per-quarantine records
         default_factory=list)
-    wall_start: float = dataclasses.field(  # engine construction time (wall)
-        default_factory=time.perf_counter)
+    # Durability counters (DESIGN.md §12). tokens_replayed counts post-
+    # restore tokens that were regenerated on device but deduplicated
+    # against the journal (verified byte-equal, not re-delivered);
+    # checkpoints_written counts atomic engine checkpoints.
+    tokens_replayed: int = 0    # journal-deduped regenerated tokens (count)
+    checkpoints_written: int = 0  # atomic checkpoints written (count)
+    # Injectable time source (satellite of DESIGN.md §12): every wall-
+    # clock read in the engine goes through this, so deadline tests use a
+    # fake clock and journal timestamps are replayable.
+    clock: Callable[[], float] = time.perf_counter
+    wall_start: float | None = None  # engine construction time (wall)
     per_request: dict = dataclasses.field(  # rid -> RequestStats
         default_factory=dict)
+
+    def __post_init__(self):
+        if self.wall_start is None:
+            self.wall_start = self.clock()
 
     def sample(self, queue_depth: int, occupancy: int):
         self.queue_depth_sum += queue_depth
@@ -415,7 +432,7 @@ class ServingMetrics:
         self.occupancy_sum += occupancy
 
     def summary(self) -> dict:
-        wall = max(time.perf_counter() - self.wall_start, 1e-9)
+        wall = max(self.clock() - self.wall_start, 1e-9)
         ttfts = sorted(s.ttft_ticks for s in self.per_request.values()
                        if s.ttft_ticks is not None)
         ttfts_s = sorted(s.ttft_s for s in self.per_request.values()
@@ -463,6 +480,8 @@ class ServingMetrics:
             "faults_detected": self.faults_detected,
             "fault_retries": self.fault_retries,
             "fault_retries_succeeded": self.fault_retries_succeeded,
+            "tokens_replayed": self.tokens_replayed,
+            "checkpoints_written": self.checkpoints_written,
             "wall_s": wall,
             "decode_tokens_per_s": self.tokens_generated / wall,
             "total_tokens_per_s":
@@ -704,10 +723,16 @@ class ContinuousServingEngine:
     def __init__(self, cfg: ArchConfig, params, mesh, *,
                  serving: ServingConfig = ServingConfig(),
                  rules: shd.ShardingRules = shd.DEFAULT_RULES,
-                 fault_injector=None, prefix_cache=None):
+                 fault_injector=None, prefix_cache=None,
+                 journal: journal_lib.Journal | None = None,
+                 clock: Callable[[], float] = time.perf_counter):
         self.cfg, self.params, self.mesh = cfg, params, mesh
         self.serving = serving
         self.rules = rules
+        # Injectable wall-clock source — every perf_counter read in the
+        # engine and its metrics goes through this (fake clocks make the
+        # wall-deadline tests deterministic; DESIGN.md §12 satellite).
+        self._clock = clock
         # Chaos harness hook (serving.faults.FaultInjector) — test/bench
         # only; None in production. The engine consults it for slot
         # corruption, injected cancellations, and arrival delays.
@@ -753,11 +778,28 @@ class ContinuousServingEngine:
         self.metrics = ServingMetrics(
             num_slots=serving.num_slots, macro_ticks=serving.macro_ticks,
             slot_shards=self.slot_shards,
-            num_pages=self.page_pool.num_pages if self._paged else 0)
+            num_pages=self.page_pool.num_pages if self._paged else 0,
+            clock=clock)
         self.tick = 0
         self._next_rid = 0
         self._outputs: dict[int, list] = {}
         self._prefill: _Prefill | None = None
+        # Durability layer (DESIGN.md §12). With a journal attached, every
+        # admission/token/termination is journaled (fsync once per engine
+        # step — macro-step granularity, hot-loop cadence untouched) and
+        # checkpoint_every_ticks > 0 adds periodic atomic checkpoints in
+        # the journal's directory. ``_replay_until[rid]`` marks how many
+        # tokens of a restored request are already journaled: regenerated
+        # tokens below that index are verified byte-equal and deduped
+        # instead of re-delivered.
+        self.journal = journal
+        self._ckpt_dir = (os.path.dirname(os.path.abspath(journal.path))
+                          if journal is not None else None)
+        self._last_ckpt_tick = 0
+        self._replay_until: dict[int, int] = {}
+        self.recovery: dict | None = None
+        self._audit = serving.debug_audit or (
+            os.environ.get("REPRO_DEBUG_AUDIT", "") not in ("", "0"))
         self._chunkable = api.supports_chunked_prefill(cfg)
         self._bucketable = (serving.prefill_buckets
                             and api.supports_masked_prefill(cfg))
@@ -789,6 +831,7 @@ class ContinuousServingEngine:
         rep_sh = jax.sharding.NamedSharding(mesh,
                                             jax.sharding.PartitionSpec())
         self._abstract = (p_abs, c_abs)
+        self._cache_sharding = c_sh   # restore() re-places checkpointed pools
         with mesh:
             self.pool = jax.device_put(api.init_cache(cfg, S, L, **page_kw),
                                        c_sh)
@@ -872,6 +915,16 @@ class ContinuousServingEngine:
             lambda p, b: api.prefill(p, cfg, b, max_len=L))
         self._prefill_masked_fn = jax.jit(
             lambda p, b, n: api.prefill(p, cfg, b, max_len=L, true_len=n))
+        if journal is not None and journal.nbytes == 0:
+            # Fresh journal: stamp the sampling/geometry contract once.
+            # restore() refuses a journal whose stream keying or sampling
+            # params differ — regenerated tokens would not be byte-equal.
+            journal.append({
+                "t": "meta", "v": journal_lib.JOURNAL_VERSION,
+                "stream_key_v": sampling.STREAM_KEY_VERSION,
+                "seed": serving.seed, "temperature": serving.temperature,
+                "num_slots": S, "max_len": L})
+            journal.flush()
 
     # -- submission ---------------------------------------------------------
 
@@ -924,11 +977,29 @@ class ContinuousServingEngine:
         self._next_rid += 1
         st = RequestStats(rid=rid, arrival=req.arrival_time,
                           prompt_len=len(req.prompt))
-        st.arrival_wall = time.perf_counter()
+        st.arrival_wall = self._clock()
         self.metrics.per_request[rid] = st
         self._outputs[rid] = []
+        if self.journal is not None:
+            prompt = np.asarray(req.prompt, np.int32).reshape(-1)
+            self.journal.append({
+                "t": "admit", "rid": rid,
+                "prompt": [int(x) for x in prompt],
+                "digest": prefix_lib.token_digest(prompt).hex(),
+                "arrival": float(req.arrival_time),
+                "max_new": int(req.max_new_tokens),
+                "eos": int(req.eos_id),
+                "ttft_deadline_ticks": req.ttft_deadline_ticks,
+                "deadline_ticks": req.deadline_ticks,
+                "ttft_deadline_s": req.ttft_deadline_s,
+                "deadline_s": req.deadline_s,
+                "ts": self._clock()})
         for srid, sreq in shed:
             self._terminate(srid, sreq, "shed")
+        if self.journal is not None:
+            # Admission durability: fsync before the caller learns the
+            # rid. Off the decode hot loop, so the §7 cadence is intact.
+            self.journal.flush()
         return rid
 
     # -- engine ticks -------------------------------------------------------
@@ -965,6 +1036,13 @@ class ContinuousServingEngine:
                 self.metrics.sample(sched.queue_depth, sched.occupancy)
                 self.tick += 1
         self.metrics.ticks = self.tick
+        if self.journal is not None:
+            # One fsync per engine step = macro-step granularity: the
+            # K-tick decode dispatch batch-journals its emissions here.
+            self.journal.flush()
+            every = self.serving.checkpoint_every_ticks
+            if every and self.tick - self._last_ckpt_tick >= every:
+                self.checkpoint()
         return did or bool(sched.waiting)
 
     def run(self, requests: list[Request] | None = None, *,
@@ -980,9 +1058,15 @@ class ContinuousServingEngine:
                     or self.sched.waiting or self._prefill):
                 break
             self.step()
+        if self.journal is not None:
+            self.journal.flush()
+        if self._audit:
+            self._debug_audit()
         outs = {rid: np.asarray(toks, np.int32)
                 for rid, toks in self._outputs.items()}
         summary = self.metrics.summary()
+        summary["journal_bytes"] = (self.journal.nbytes
+                                    if self.journal is not None else 0)
         # Leak contract (CI asserts these on every bench row): a drained
         # engine holds zero live slots and an empty queue — every
         # admission path, including quarantine retries, cancels, and
@@ -994,6 +1078,254 @@ class ContinuousServingEngine:
         summary["final_pages_in_use"] = (
             self.page_pool.pages_in_use() if self.page_pool else 0)
         return outs, summary
+
+    # -- durability: checkpoint / restore (DESIGN.md §12) -------------------
+
+    def checkpoint(self) -> str:
+        """Write an atomic engine checkpoint next to the journal.
+
+        Journal first, checkpoint second: the flush guarantees every
+        token the checkpointed mirrors count as emitted is on disk, so a
+        restored resident slot's ``gen`` can never run ahead of its
+        journaled stream. Called automatically every
+        ``serving.checkpoint_every_ticks`` ticks (macro-step boundaries),
+        or explicitly."""
+        if self.journal is None:
+            raise RuntimeError(
+                "checkpointing requires the engine to have a journal "
+                "(ContinuousServingEngine(..., journal=Journal(path)))")
+        self.journal.flush()
+        state = checkpoint_lib.snapshot_engine(self)
+        path = checkpoint_lib.checkpoint_path(self._ckpt_dir, self.tick)
+        checkpoint_lib.save(path, state)
+        self._last_ckpt_tick = self.tick
+        self.metrics.checkpoints_written += 1
+        return path
+
+    @classmethod
+    def restore(cls, path: str, cfg: ArchConfig, params, mesh, *,
+                serving: ServingConfig = ServingConfig(),
+                rules: shd.ShardingRules = shd.DEFAULT_RULES,
+                fault_injector=None, prefix_cache=None,
+                clock: Callable[[], float] = time.perf_counter,
+                on_token: Callable[[int, int], None] | None = None,
+                on_finish: Callable[[int, str], None] | None = None,
+                redeliver: bool = False) -> "ContinuousServingEngine":
+        """Rebuild an engine from a durability directory (journal +
+        checkpoints) after a crash, with byte-identical streams.
+
+        Recovery sequence (DESIGN.md §12): tolerant journal replay (torn
+        tail dropped and truncated), latest *valid* checkpoint load
+        (corrupt files skipped), fresh engine construction, then
+        ``_apply_restore``: device pool + mirrors + allocator + prefix
+        cache come from the checkpoint when its geometry matches this
+        config; every live rid is rebuilt from its journaled admission —
+        checkpoint-resident ones resume mid-stream in their slots,
+        everything else re-queues in arrival order and re-prefills from
+        scratch. Because sampling is keyed on (seed, rid, token-index),
+        both paths regenerate the pre-crash tokens bit-for-bit; the
+        journal horizon dedupes them (verified in ``_emit``) so streaming
+        callbacks see each token exactly once. A checkpoint with a
+        *different* slot count (restore onto another machine shape) is
+        rejected wholesale and recovery is journal-only — streams are
+        still byte-identical, only more tokens replay.
+
+        ``on_token``/``on_finish`` attach to every restored live request;
+        ``redeliver=True`` additionally re-fires them for the journaled
+        prefix (and journaled terminal requests) at restore time —
+        exactly-once delivery for a consumer that lost its own state with
+        the process."""
+        t0 = clock()
+        jpath = os.path.join(path, journal_lib.JOURNAL_NAME)
+        jst = journal_lib.replay(jpath)
+        meta = jst.meta
+        if meta is not None:
+            if meta.get("stream_key_v") != sampling.STREAM_KEY_VERSION:
+                raise ValueError(
+                    f"journal stream keying v{meta.get('stream_key_v')} != "
+                    f"engine v{sampling.STREAM_KEY_VERSION}: regenerated "
+                    f"tokens would not be byte-identical; cannot resume")
+            if (int(meta.get("seed", serving.seed)) != serving.seed
+                    or float(meta.get("temperature", serving.temperature))
+                    != serving.temperature):
+                raise ValueError(
+                    "journal was written under a different sampling config "
+                    f"(seed={meta.get('seed')}, temperature="
+                    f"{meta.get('temperature')}); restore with the same "
+                    "seed/temperature or streams diverge")
+        ck = checkpoint_lib.latest_valid(path)
+        jr = journal_lib.Journal(jpath, truncate_to=jst.valid_bytes)
+        eng = cls(cfg, params, mesh, serving=serving, rules=rules,
+                  fault_injector=fault_injector, prefix_cache=prefix_cache,
+                  journal=jr, clock=clock)
+        eng._apply_restore(jst, ck, on_token=on_token, on_finish=on_finish,
+                           redeliver=redeliver)
+        eng.recovery["wall_s"] = clock() - t0
+        return eng
+
+    def _apply_restore(self, jst: journal_lib.JournalState,
+                       ck: dict | None, *, on_token, on_finish,
+                       redeliver: bool):
+        S = self.serving.num_slots
+        usable = (
+            ck is not None
+            and int(ck.get("num_slots", -1)) == S
+            and int(ck.get("max_len", -1)) == self.serving.max_len
+            and int(ck.get("page_size", -1))
+            == (self.serving.page_size if self._paged else 0))
+        if usable:
+            cur = jax.tree.leaves(self.pool)
+            saved = ck["pool"]
+            usable = (len(cur) == len(saved) and all(
+                tuple(c.shape) == tuple(s.shape)
+                and np.dtype(c.dtype) == np.dtype(s.dtype)
+                for c, s in zip(cur, saved)))
+        resident: dict[int, int] = {}       # rid -> slot
+        if usable:
+            treedef = jax.tree.structure(self.pool)
+            with self.mesh:
+                self.pool = jax.device_put(
+                    jax.tree.unflatten(
+                        treedef, [jnp.asarray(x) for x in ck["pool"]]),
+                    self._cache_sharding)
+            mir = ck["mirrors"]
+            self._last_tok = np.asarray(mir["last_tok"], np.int32).copy()
+            self._active = np.asarray(mir["active"], bool).copy()
+            self._rids = np.asarray(mir["rids"], np.int32).copy()
+            self._gen = np.asarray(mir["gen"], np.int32).copy()
+            self._eos = np.asarray(mir["eos"], np.int32).copy()
+            self._maxn = np.asarray(mir["maxn"], np.int32).copy()
+            if self.page_pool is not None and ck.get("page_pool"):
+                self.page_pool.load_snapshot(ck["page_pool"])
+            self.tick = int(ck["tick"])
+            self.metrics.ticks = self.tick
+            self._last_ckpt_tick = self.tick
+            resident = {int(r): int(s) for s, r in ck["slots"].items()}
+            if self.prefix_cache is not None and ck.get("prefix"):
+                # Rebuild the prefix-cache index. Entries are batch=1
+                # unpaged snapshots; refcounts restart at zero (live pins
+                # are re-acquired when restored requests re-admit).
+                pstruct = jax.tree.structure(
+                    api.init_cache(self.cfg, 1, self.serving.max_len))
+                for ent in ck["prefix"]:
+                    try:
+                        cache = jax.tree.unflatten(
+                            pstruct,
+                            [jnp.asarray(x) for x in ent["cache"]])
+                        lg = (jnp.asarray(ent["logits"])
+                              if ent["logits"] is not None else None)
+                        self.prefix_cache.insert(ent["tokens"], cache,
+                                                 logits=lg, copy=False)
+                    except Exception:
+                        continue  # shape-incompatible entry: skip, a miss
+        nr = int(ck["next_rid"]) if usable else 0
+        if jst.admits:
+            nr = max(nr, max(jst.admits) + 1)
+        self._next_rid = nr
+        # Validate checkpoint residency against the journal: a resident
+        # slot needs a journaled admission, no terminal record, agreeing
+        # mirrors, and a journaled stream at least as long as its ``gen``
+        # (guaranteed by the flush-before-checkpoint order; anything else
+        # falls back to re-admission from scratch).
+        for rid, slot in list(resident.items()):
+            toks = jst.tokens.get(rid, [])
+            ok = (rid in jst.admits and rid not in jst.fins
+                  and 0 <= slot < S and bool(self._active[slot])
+                  and int(self._rids[slot]) == rid
+                  and 0 < int(self._gen[slot]) <= len(toks))
+            if not ok:
+                resident.pop(rid)
+        now_wall = self._clock()
+        for rid in sorted(jst.admits):
+            a = jst.admits[rid]
+            toks = [int(t) for t in jst.tokens.get(rid, [])]
+            st = RequestStats(rid=rid, arrival=float(a["arrival"]),
+                              prompt_len=len(a["prompt"]))
+            st.arrival_wall = now_wall   # wall deadlines re-anchor here
+            st.retries = int(jst.retries.get(rid, 0))
+            self.metrics.per_request[rid] = st
+            self._outputs[rid] = list(toks)
+            fin = jst.fins.get(rid)
+            if fin is not None:
+                # Terminal before the crash: the stream is fixed from the
+                # journal; not re-admitted, not re-counted in lifetime
+                # counters (they describe this engine's work).
+                st.finish_reason = fin
+                st.finished = self.tick
+                continue
+            req = Request(
+                np.asarray(a["prompt"], np.int32),
+                max_new_tokens=int(a["max_new"]),
+                eos_id=int(a["eos"]),
+                arrival_time=float(a["arrival"]),
+                on_token=on_token, on_finish=on_finish,
+                ttft_deadline_ticks=a.get("ttft_deadline_ticks"),
+                deadline_ticks=a.get("deadline_ticks"),
+                ttft_deadline_s=a.get("ttft_deadline_s"),
+                deadline_s=a.get("deadline_s"))
+            if toks:
+                self._replay_until[rid] = len(toks)
+            slot = resident.get(rid)
+            if slot is not None:
+                gen = int(self._gen[slot])
+                rec = _Slot(rid, req, int(self._last_tok[slot]),
+                            tokens=list(toks[:gen]))
+                self.sched.active[slot] = rec
+                self.sched.free.remove(slot)
+                st.slot = slot
+                st.admitted = self.tick
+                st.first_token = self.tick
+                st.first_token_wall = now_wall
+            else:
+                self.sched.waiting.append((rid, req))
+        self.sched.waiting = collections.deque(
+            sorted(self.sched.waiting,
+                   key=lambda t: (t[1].arrival_time, t[0])))
+        # Clear mirror/allocator state for slots the journal suffix shows
+        # were evicted (or whose residency failed validation) after the
+        # checkpoint. No device op needed: inactive slots are masked
+        # passthrough in the decode scan, write_slot fully overwrites on
+        # reuse, and unmapped pages gather as zeros.
+        for slot in range(S):
+            if self._active[slot] and slot not in self.sched.active:
+                self._active[slot] = False
+                if (self.page_pool is not None
+                        and self.page_pool.slot_pages(slot)):
+                    self.page_pool.free_slot(slot)
+        if self.page_pool is not None:
+            self._note_pages()
+        if redeliver:
+            for rid in sorted(self._outputs):
+                if on_token is not None:
+                    for tok in self._outputs[rid]:
+                        on_token(rid, int(tok))
+                fin = jst.fins.get(rid)
+                if fin is not None and on_finish is not None:
+                    on_finish(rid, fin)
+        self.recovery = {
+            "checkpoint_used": bool(usable),
+            "checkpoint_tick": int(ck["tick"]) if usable else None,
+            "journal_records": jst.records,
+            "journal_dropped_tail": jst.dropped_tail,
+            "resident_resumed": len(self.sched.active),
+            "requeued": len(self.sched.waiting),
+            "terminal_from_journal": len(jst.fins),
+        }
+
+    def _debug_audit(self):
+        """Invariant audit (``ServingConfig.debug_audit`` or the
+        ``REPRO_DEBUG_AUDIT`` env var), run at the end of every
+        :meth:`run`: the page allocator's free/owned partition must be
+        consistent and every prefix-cache refcount must correspond to a
+        live engine pin — a leaked pin would block eviction forever."""
+        if self.page_pool is not None:
+            self.page_pool.check()
+        if self.prefix_cache is not None:
+            refs = self.prefix_cache.live_refs()
+            pins = len(self._pfx_refs)
+            assert refs == pins, (
+                f"prefix-cache refcount leak: {refs} live refs vs {pins} "
+                f"engine pins")
 
     # -- internals ----------------------------------------------------------
 
@@ -1154,7 +1486,7 @@ class ContinuousServingEngine:
         self._gen[pf.slot] = 1
         self._eos[pf.slot] = req.eos_id
         self._maxn[pf.slot] = req.max_new_tokens
-        self._emit(slot_rec, tok0)
+        self._emit(slot_rec, tok0, 0)
         if tok0 == req.eos_id or req.max_new_tokens <= 1:
             self._finish(pf.slot,
                          sampling.finish_reason_of(tok0, req.eos_id))
@@ -1191,7 +1523,7 @@ class ContinuousServingEngine:
                 rec.last_tok = tk
                 self._last_tok[slot] = tk
                 self._gen[slot] += 1
-                self._emit(rec, tk)
+                self._emit(rec, tk, int(self._gen[slot]) - 1)
                 if (tk == rec.req.eos_id
                         or len(rec.tokens) >= rec.req.max_new_tokens):
                     self._finish(slot, sampling.finish_reason_of(
@@ -1243,14 +1575,40 @@ class ContinuousServingEngine:
                                            i32, i32)
         return lowered.compile().as_text()
 
-    def _emit(self, rec: _Slot, tok: int):
-        rec.tokens.append(tok)
-        self._outputs[rec.rid].append(tok)
-        self.metrics.tokens_generated += 1
+    def _emit(self, rec: _Slot, tok: int, idx: int):
+        """Deliver one emitted token. ``idx`` is the request's token index
+        (the sampling key index — 0 for the prefill-sampled first token).
+
+        Post-restore dedup (DESIGN.md §12): tokens with ``idx`` below the
+        request's journaled horizon were already delivered before the
+        crash. Deterministic (seed, rid, idx) sampling regenerates them
+        bit-for-bit — verified here, which *is* the byte-identity
+        assertion — and they are counted as replayed, not re-journaled or
+        re-delivered to callbacks."""
         st = self.metrics.per_request[rec.rid]
+        out = self._outputs[rec.rid]
+        if idx < self._replay_until.get(rec.rid, 0):
+            if idx >= len(out) or tok != out[idx]:
+                raise RuntimeError(
+                    f"restore byte-identity violated: rid {rec.rid} token "
+                    f"{idx} regenerated {tok} != journaled "
+                    f"{out[idx] if idx < len(out) else '<missing>'}")
+            rec.tokens.append(tok)
+            self.metrics.tokens_generated += 1
+            self.metrics.tokens_replayed += 1
+            if st.first_token is None:
+                st.first_token = self.tick
+                st.first_token_wall = self._clock()
+            return
+        rec.tokens.append(tok)
+        out.append(tok)
+        self.metrics.tokens_generated += 1
         if st.first_token is None:
             st.first_token = self.tick
-            st.first_token_wall = time.perf_counter()
+            st.first_token_wall = self._clock()
+        if self.journal is not None:
+            self.journal.append({"t": "tok", "rid": rec.rid,
+                                 "tok": int(tok)})
         if rec.req.on_token is not None:
             rec.req.on_token(rec.rid, tok)
 
@@ -1285,6 +1643,10 @@ class ContinuousServingEngine:
         st = self.metrics.per_request[rid]
         st.finished = self.tick
         st.finish_reason = reason
+        self._replay_until.pop(rid, None)
+        if self.journal is not None:
+            self.journal.append({"t": "fin", "rid": rid, "reason": reason,
+                                 "tick": self.tick})
         entry = self._pfx_refs.pop(rid, None)
         if entry is not None:       # release the seeding snapshot's pin
             self.prefix_cache.release(entry)
@@ -1323,6 +1685,12 @@ class ContinuousServingEngine:
             st.retries += 1
             m.fault_retries += 1
             self._outputs[rec.rid] = []
+            # A retry restarts the stream from index 0: void the journaled
+            # prefix (replay folds a retry record into an empty token
+            # list) and drop any restore-dedup horizon with it.
+            self._replay_until.pop(rec.rid, None)
+            if self.journal is not None:
+                self.journal.append({"t": "retry", "rid": rec.rid})
             st.first_token = None
             st.first_token_wall = None
             st.prefix_cached = False
@@ -1385,7 +1753,7 @@ class ContinuousServingEngine:
         the deadline tick finishes ``eos``/``length`` — EOS wins.
         TTFT deadlines only bind while no token has been emitted yet."""
         now = self.tick
-        wall = time.perf_counter()
+        wall = self._clock()
 
         def expired(req: Request, st: RequestStats) -> bool:
             age = now - req.arrival_time
@@ -1438,6 +1806,11 @@ class ContinuousServingEngine:
         NaNs a live slot's float state on device — detection is then the
         macro-step fault lane's job, exactly as for an organic fault."""
         inj = self._injector
+        if inj.crash_now(self.tick):
+            # Simulated process death (DESIGN.md §12): propagate out of
+            # step() with no flush and no cleanup — buffered journal
+            # records are lost exactly as a real kill -9 would lose them.
+            raise faults_lib.EngineCrash(self.tick)
         live_rids = ([rec.rid for rec in self.sched.active.values()]
                      + [rid for rid, _ in self.sched.ready])
         for rid in inj.cancel_rids(self.tick, live_rids):

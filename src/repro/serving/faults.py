@@ -27,7 +27,21 @@ import dataclasses
 import numpy as np
 
 # SeedSequence stream tags — one disjoint stream per fault kind.
-_ARRIVAL, _CANCEL, _NAN = 1, 2, 3
+_ARRIVAL, _CANCEL, _NAN, _CRASH = 1, 2, 3, 4
+
+
+class EngineCrash(RuntimeError):
+    """Injected stand-in for process death (kill -9, preemption).
+
+    Raised out of ``engine.step()`` at the crash tick. The harness must
+    *abandon* the engine object — no cleanup runs, unflushed journal
+    records are lost, exactly as a real crash would lose them — and
+    recover via ``ContinuousServingEngine.restore`` (DESIGN.md §12).
+    """
+
+    def __init__(self, tick: int):
+        super().__init__(f"injected crash at tick {tick}")
+        self.tick = int(tick)
 
 
 @dataclasses.dataclass
@@ -39,6 +53,9 @@ class FaultInjector:
     cancel_every  cancel one live request every N ticks
     delay_prob    chance a submission's arrival_time is pushed back by
                   Uniform{1..max_delay_ticks} ticks
+    crash_window  (lo, hi) tick window: the engine dies (EngineCrash) at
+                  one seeded uniform tick in [lo, hi]; () disables. Fires
+                  at most once per injector instance.
     """
 
     seed: int = 0
@@ -46,8 +63,10 @@ class FaultInjector:
     cancel_every: int = 0
     delay_prob: float = 0.0
     max_delay_ticks: int = 8
+    crash_window: tuple = ()
     log: list = dataclasses.field(default_factory=list)
     _submissions: int = 0
+    _crashed: bool = False
 
     def _rng(self, kind: int, n: int) -> np.random.Generator:
         return np.random.default_rng(
@@ -81,6 +100,26 @@ class FaultInjector:
         rid = rids[int(self._rng(_CANCEL, tick).integers(len(rids)))]
         self.log.append({"kind": "cancel", "tick": tick, "rid": rid})
         return [rid]
+
+    def crash_tick(self) -> int | None:
+        """The seeded tick this injector will crash at, or None."""
+        if not self.crash_window:
+            return None
+        lo, hi = int(self.crash_window[0]), int(self.crash_window[1])
+        if hi <= lo:
+            return lo
+        return lo + int(self._rng(_CRASH, 0).integers(hi - lo + 1))
+
+    def crash_now(self, tick: int) -> bool:
+        """True exactly once, at the first tick >= the seeded crash tick.
+        The engine raises :class:`EngineCrash` out of ``step()`` — no
+        flush, no cleanup — simulating process death mid-run."""
+        t = self.crash_tick()
+        if t is None or self._crashed or tick < t:
+            return False
+        self._crashed = True
+        self.log.append({"kind": "crash", "tick": int(tick)})
+        return True
 
     def corrupt_slots(self, tick: int, live_slots) -> list[int]:
         """Pool slots to NaN-corrupt at this tick (at most one), chosen

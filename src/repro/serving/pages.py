@@ -334,6 +334,38 @@ class PagePool:
                          jnp.asarray(self.owner_slot),
                          jnp.asarray(self.owner_lp), shards=self.shards)
 
+    # -- durability (DESIGN.md §12) --------------------------------------
+
+    def snapshot(self) -> dict:
+        """Plain-host copy of allocator state for engine checkpoints."""
+        return {
+            "num_slots": self.num_slots,
+            "num_pages": self.num_pages,
+            "page_size": self.page_size,
+            "pages_per_slot": self.pages_per_slot,
+            "shards": self.shards,
+            "table": self.table.copy(),
+            "owner_slot": self.owner_slot.copy(),
+            "owner_lp": self.owner_lp.copy(),
+            "free": [list(f) for f in self.free],
+            "pages_peak": int(self.pages_peak),
+        }
+
+    def load_snapshot(self, snap: dict) -> None:
+        """Restore allocator state from :meth:`snapshot`; geometry must
+        match this pool's (checkpoints are rejected upstream otherwise)."""
+        for k in ("num_slots", "num_pages", "page_size", "pages_per_slot",
+                  "shards"):
+            if int(snap[k]) != getattr(self, k):
+                raise ValueError(
+                    f"PagePool snapshot {k}={snap[k]} != {getattr(self, k)}")
+        self.table = np.asarray(snap["table"], np.int32).copy()
+        self.owner_slot = np.asarray(snap["owner_slot"], np.int32).copy()
+        self.owner_lp = np.asarray(snap["owner_lp"], np.int32).copy()
+        self.free = [sorted(int(p) for p in f) for f in snap["free"]]
+        self.pages_peak = int(snap["pages_peak"])
+        self.check()
+
     def check(self) -> None:
         """Invariant audit (tests/chaos): free + owned partitions pages,
         table and owner vectors agree, shard blocks respected."""

@@ -181,6 +181,19 @@ class PrefixCache:
                     break
         return True
 
+    # -- durability / audit (DESIGN.md §12) ------------------------------
+
+    def entries(self) -> list[PrefixEntry]:
+        """Stable (LRU-stamp) ordered view of live entries — used by the
+        engine checkpoint to persist the cache index."""
+        return sorted(self._entries.values(), key=lambda e: e.stamp)
+
+    def live_refs(self) -> int:
+        """Total refcount across entries. The engine's ``debug_audit``
+        asserts this equals its count of live per-slot pins at the end of
+        every ``run()`` — a leaked pin would wedge eviction forever."""
+        return sum(e.refs for e in self._entries.values())
+
     # -- metrics ---------------------------------------------------------
 
     def hit_rate(self) -> float:

@@ -44,6 +44,15 @@ import numpy as np
 # them); the other four are degraded-mode exits.
 FINISH_REASONS = ("eos", "length", "deadline", "cancelled", "shed", "fault")
 
+# Version of the (seed, rid, token-index) stream-keying scheme below.
+# The write-ahead journal stamps this into its meta record and restore
+# refuses to resume a journal written under a different version: crash
+# recovery regenerates in-flight tokens by *re-sampling*, so its
+# byte-identity-after-restore contract (DESIGN.md §12) is only as strong
+# as the keying being unchanged. Bump on any change to the fold_in
+# scheme, Gumbel construction, or argmax tie-breaking.
+STREAM_KEY_VERSION = 1
+
 
 def stop_hit(tok, gen, eos_id, max_new):
     """Natural-stop predicate: did the just-emitted token end the request?

@@ -1,9 +1,16 @@
 """Shared fixtures. NOTE: no XLA_FLAGS here — unit/smoke tests run on the
 single real CPU device; only the dry-run sets the 512-device placeholder
 flag (and only in its own process)."""
+import os
+
 import jax
 import numpy as np
 import pytest
+
+# Every engine.run() in the test suite ends with the invariant audit
+# (DESIGN.md §12): PagePool.check() + prefix-cache refcounts == live pins.
+# setdefault so REPRO_DEBUG_AUDIT=0 can still switch it off locally.
+os.environ.setdefault("REPRO_DEBUG_AUDIT", "1")
 
 
 @pytest.fixture

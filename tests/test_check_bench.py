@@ -1,0 +1,90 @@
+"""Bench-regression gate unit behavior (tools/check_bench.py): a row new
+in the current run but absent from the baseline is noted and skipped —
+never a crash or a failure — while a baseline row gone missing still
+fails, and rows without a ``load`` key (e.g. crash-recovery rows before
+their regime prefix skip) cannot KeyError the gate."""
+import json
+import os
+import sys
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_REPO, "tools"))
+
+import check_bench  # noqa: E402
+
+
+def _payload(*rows):
+    return {"results": list(rows)}
+
+
+def _row(regime, load=1.0, **metrics):
+    base = {"regime": regime, "load": load, "tokens_per_dispatch": 3.0,
+            "host_syncs_per_token": 0.25, "mean_slot_occupancy": 0.9}
+    base.update(metrics)
+    return base
+
+
+def test_identical_runs_pass():
+    lines, bad = check_bench.compare(_payload(_row("steady")),
+                                     _payload(_row("steady")))
+    assert not bad
+    assert not any("REGRESSION" in ln for ln in lines)
+
+
+def test_new_row_is_noted_not_failed():
+    """A regime added by the current change (no baseline entry yet) must
+    not fail the gate — it gets a visible note and is skipped."""
+    baseline = _payload(_row("steady"))
+    current = _payload(_row("steady"), _row("brand_new_regime"))
+    lines, bad = check_bench.compare(baseline, current)
+    assert not bad
+    note = [ln for ln in lines if "brand_new_regime" in ln]
+    assert note and "new row (not in baseline)" in note[0]
+
+
+def test_missing_baseline_row_fails():
+    baseline = _payload(_row("steady"), _row("burst"))
+    current = _payload(_row("steady"))
+    lines, bad = check_bench.compare(baseline, current)
+    assert bad
+    assert any("MISSING ROW" in ln and "burst" in ln for ln in lines)
+
+
+def test_regression_detected_and_improvement_tolerated():
+    baseline = _payload(_row("steady"))
+    worse = _payload(_row("steady", host_syncs_per_token=0.5))
+    _, bad = check_bench.compare(baseline, worse)
+    assert bad
+    better = _payload(_row("steady", host_syncs_per_token=0.1))
+    _, bad = check_bench.compare(baseline, better)
+    assert not bad
+
+
+def test_chaos_and_crash_rows_excluded_and_load_optional():
+    """Chaos/crash-recovery rows never enter the trend gate, and a row
+    without a ``load`` key parses (defaults to 0.0) instead of raising."""
+    cur = _payload(_row("steady"),
+                   {"regime": "chaos_nan", "streams_ok": True},
+                   {"regime": "crash_recovery_paged",
+                    "streams_byte_identical": True},
+                   _row("no_load_regime").copy())
+    del cur["results"][-1]["load"]
+    rows = check_bench._rows(cur)
+    assert ("steady", 1.0) in rows
+    assert ("no_load_regime", 0.0) in rows
+    assert not any(r.startswith(("chaos", "crash")) for r, _ in rows)
+    lines, bad = check_bench.compare(_payload(_row("steady")), cur)
+    assert not bad
+
+
+def test_cli_new_row_path_exits_zero(tmp_path):
+    """End-to-end: the CLI exits 0 when the fresh run adds a row the
+    committed baseline has never seen."""
+    bp = tmp_path / "baseline.json"
+    cp = tmp_path / "current.json"
+    bp.write_text(json.dumps(_payload(_row("steady"))))
+    cp.write_text(json.dumps(_payload(_row("steady"),
+                                      _row("crash_recovery_kv_ring"),
+                                      _row("fresh_regime"))))
+    rc = check_bench.main(["--baseline", str(bp), "--current", str(cp)])
+    assert rc == 0

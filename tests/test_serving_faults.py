@@ -33,11 +33,31 @@ def _prompt(cfg, n, seed=0):
     return rng.integers(3, cfg.vocab_size, size=n).astype(np.int32)
 
 
-def _engine(cfg, params, mesh, injector=None, **kw):
+class FakeClock:
+    """Deterministic injectable wall clock: time moves only when the test
+    says so, making wall-deadline expiry independent of host speed."""
+
+    def __init__(self, t: float = 0.0):
+        self.t = float(t)
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += float(dt)
+
+
+def _engine(cfg, params, mesh, injector=None, clock=None, journal=None,
+            **kw):
     sv = ServingConfig(**{"num_slots": 2, "max_len": 64,
                           "prefill_chunk": 4, "macro_ticks": 4, **kw})
+    extra = {}
+    if clock is not None:
+        extra["clock"] = clock
+    if journal is not None:
+        extra["journal"] = journal
     return ContinuousServingEngine(cfg, params, mesh, serving=sv,
-                                   fault_injector=injector)
+                                   fault_injector=injector, **extra)
 
 
 # -- construction-time validation -------------------------------------------
@@ -264,15 +284,53 @@ def test_natural_stop_beats_deadline_on_same_tick(setup):
 
 
 def test_wall_clock_deadline_expires(setup):
+    """Wall deadlines read the engine's injectable clock, so a fake clock
+    makes expiry exact: the stream survives while the clock is under
+    budget and cuts the moment the test advances it past, regardless of
+    how slow (or fast) the host actually is."""
     cfg, params, mesh = setup
-    eng = _engine(cfg, params, mesh)
-    # A wall-clock budget far below one CPU decode dispatch: expires on
-    # the first sweep after submission regardless of host speed.
+    fc = FakeClock()
+    eng = _engine(cfg, params, mesh, clock=fc)
     rid = eng.submit(Request(_prompt(cfg, 4), max_new_tokens=8,
-                             deadline_s=1e-9))
+                             deadline_s=0.5))
+    eng.step()                                  # clock frozen: no expiry
+    assert eng.metrics.per_request[rid].finish_reason is None
+    fc.advance(1.0)                             # blow the 0.5 s budget
     outs, s = eng.run()
     assert eng.metrics.per_request[rid].finish_reason == "deadline"
+    assert len(outs[rid]) < 8
     assert s["final_occupancy"] == 0
+
+
+def test_wall_clock_deadline_survives_when_clock_frozen(setup):
+    """Control for the fake-clock test above: with the clock never
+    advanced the same sub-second budget never expires and the request
+    runs to its natural stop — proving expiry is driven by the injected
+    clock, not real elapsed time."""
+    cfg, params, mesh = setup
+    eng = _engine(cfg, params, mesh, clock=FakeClock())
+    rid = eng.submit(Request(_prompt(cfg, 4), max_new_tokens=8,
+                             deadline_s=0.5))
+    outs, s = eng.run()
+    assert eng.metrics.per_request[rid].finish_reason == "length"
+    assert len(outs[rid]) == 8
+
+
+def test_ttft_wall_deadline_with_fake_clock(setup):
+    """A queued request whose TTFT wall budget elapses (on the fake
+    clock) before a slot frees expires without ever emitting."""
+    cfg, params, mesh = setup
+    fc = FakeClock()
+    eng = _engine(cfg, params, mesh, num_slots=1, clock=fc)
+    r0 = eng.submit(Request(_prompt(cfg, 4, 0), max_new_tokens=8))
+    r1 = eng.submit(Request(_prompt(cfg, 4, 1), max_new_tokens=8,
+                            ttft_deadline_s=0.25))
+    fc.advance(1.0)
+    outs, s = eng.run()
+    assert len(outs[r0]) == 8
+    assert len(outs[r1]) == 0
+    assert eng.metrics.per_request[r1].finish_reason == "deadline"
+    assert eng.metrics.per_request[r1].ttft_s is None
 
 
 # -- metrics edge cases ------------------------------------------------------

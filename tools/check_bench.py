@@ -49,9 +49,13 @@ _METRICS = {
 
 
 def _rows(payload: dict) -> dict:
-    """(regime, load) -> row, chaos rows excluded (not trended here)."""
-    return {(r["regime"], r["load"]): r for r in payload["results"]
-            if not r["regime"].startswith("chaos")}
+    """(regime, load) -> row. Chaos and crash-recovery rows are excluded
+    (their degraded-mode/recovery contracts are asserted by the chaos CI
+    step, not trended); ``load`` defaults to 0.0 so rows from suites
+    without a load sweep never KeyError the gate."""
+    return {(r["regime"], float(r.get("load", 0.0))): r
+            for r in payload["results"]
+            if not r["regime"].startswith(("chaos", "crash"))}
 
 
 def _check_metric(metric: str, base: float, cur: float) -> tuple[str, float]:
