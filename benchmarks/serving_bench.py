@@ -30,6 +30,20 @@ a mesh=(data=N,) slot-sharded pool in a forced-multi-device subprocess
 contract step asserts the sharded digest equals the single-shard one —
 the DESIGN.md §8 byte-identical-stream contract.
 
+The speculative family (DESIGN.md §13) rides every run: an ``exact_yat``
+greedy baseline (yat_spherical verifier config, plain decode) and a
+``spec_constant_state`` draft-verify row on the same trace — the linear
+SLAY regime drafts ``spec_gamma`` tokens per slot, the exact verifier
+scores them in one chunked dispatch. The CI spec-decode contract asserts
+``stream_digest`` equality between the two rows (greedy speculative ≡
+greedy exact, byte-identical), ``tokens_per_dispatch > macro_ticks``,
+and ``draft_acceptance_rate >= 0.5``. Both rows replay one pinned
+contract trace (fixed geometry + seed, identical at every tier): the
+byte-identity contract presumes a unique fp32 argmax at every emitted
+position, and random smoke weights can manufacture exact top-2 logit
+ties that the two differently-shaped scorer programs may legally break
+either way (DESIGN.md §13), so the pinned seed is checked tie-free.
+
 Three DESIGN.md §11 rows ride every run: ``kv_ring_paged`` replays the
 kv_ring trace with the page-table layer on (its ``stream_digest`` must
 equal the unpaged row's; ``pages_peak`` / ``final_pages_in_use`` expose
@@ -190,13 +204,15 @@ def _sharded_row(p: dict, load: float) -> dict:
 
 def _trace_row(cfg, params, mesh, p: dict, load: float, regime: str,
                results: list, rows: list, *, page_size: int = 0,
-               prefix_cache=None, reqs=None):
+               prefix_cache=None, reqs=None, speculative: bool = False,
+               spec_gamma: int = 2):
     """Run one (config, load) Poisson trace; append BenchResults + a JSON
     row, asserting the backend-independent hot-loop contract.
 
     ``page_size`` pages the slot pool (``*_paged``/``prefix_*`` rows);
     ``prefix_cache`` shares a pre-warmed PrefixCache (``prefix_cached``
-    row); ``reqs`` overrides the default Poisson trace."""
+    row); ``reqs`` overrides the default Poisson trace; ``speculative``
+    turns on draft-verify decoding (``spec_*`` rows, DESIGN.md §13)."""
     if reqs is None:
         rng = np.random.default_rng(1234)
         reqs = _poisson_trace(rng, p["n"], load, p["prompt"],
@@ -207,7 +223,9 @@ def _trace_row(cfg, params, mesh, p: dict, load: float, regime: str,
                               max_len=p["max_len"],
                               prefill_chunk=p["prefill_chunk"],
                               macro_ticks=_MACRO_TICKS,
-                              page_size=page_size),
+                              page_size=page_size,
+                              speculative=speculative,
+                              spec_gamma=spec_gamma),
         prefix_cache=prefix_cache)
     outs, summary = eng.run(reqs)
     assert summary["requests_completed"] == p["n"]
@@ -219,7 +237,9 @@ def _trace_row(cfg, params, mesh, p: dict, load: float, regime: str,
         + 1e-9, summary["host_syncs_per_token"]
     jit_entries = eng.jit_cache_entries()
     # Missing key = jax introspection unavailable, not a recompile.
-    assert jit_entries.get("macro_decode", 1) == 1, jit_entries
+    # In speculative mode the hot loop is the spec macro-step instead.
+    hot = "spec_macro" if speculative else "macro_decode"
+    assert jit_entries.get(hot, 1) == 1, jit_entries
     tag = f"serving/{regime}/load{load:g}"
     for key in ("decode_tokens_per_s", "ttft_ticks_p50",
                 "ttft_ticks_p95", "mean_slot_occupancy",
@@ -525,6 +545,60 @@ def run(quick: bool = True, smoke: bool = False, chaos: bool = False):
         f"serving/constant_state_sharded/load{load:g}/slot_shards",
         float(sharded["slot_shards"]), "shards",
         extra={"regime": "constant_state_sharded", "load": load}))
+
+    # Speculative-decoding family (DESIGN.md §13): an exact-yat greedy
+    # baseline row plus a draft-verify row on the same config — linear
+    # SLAY drafts spec_gamma tokens per slot, the exact yat verifier
+    # scores them in one chunked dispatch. The contract asserted here and
+    # re-asserted from the JSON by the CI spec-decode step: the accepted
+    # streams are byte-identical to plain greedy exact decode (the
+    # accept/resample correction emits exactly the verifier's argmax) and
+    # the amortization is real — tokens/dispatch materially above
+    # macro_ticks, draft acceptance >= 0.5. The small SLAY feature bank
+    # keeps the draft steps cheap; it is the *verifier's* features that
+    # set output quality, so the baseline uses the same trunk.
+    #
+    # The family runs on a pinned contract trace (geometry + seed below),
+    # identical at every bench tier. Byte-identity presumes the verifier's
+    # fp32 argmax is unique at every emitted position: decode_step and
+    # verify_chunk are different XLA programs (shapes (S,1,V) vs
+    # (S,gamma+1,V)), so an *exact* top-2 logit tie — measure-zero for
+    # trained weights but easy to hit with random smoke weights — can
+    # legally resolve either way. The pinned seed was checked tie-free;
+    # see DESIGN.md §13 for the contract's fine print.
+    spec_load = 1.0
+    sp = {**p, "n": 4, "max_new": 16, "prompt": (3, 8),
+          "num_slots": 2, "max_len": 32, "prefill_chunk": 4}
+    spec_cfg = configs.get_smoke_config("slayformer-124m",
+                                        attn_kind="yat_spherical",
+                                        slay_anchors=16, slay_prf=32)
+    spec_params = api.init_params(spec_cfg, jax.random.PRNGKey(0))
+
+    def spec_reqs():
+        return _poisson_trace(np.random.default_rng(2024), sp["n"], spec_load,
+                              sp["prompt"], spec_cfg.vocab_size,
+                              sp["max_new"])
+
+    _trace_row(spec_cfg, spec_params, mesh, sp, spec_load, "exact_yat",
+               results, rows, reqs=spec_reqs())
+    exact_row = rows[-1]
+    _trace_row(spec_cfg, spec_params, mesh, sp, spec_load, "spec_constant_state",
+               results, rows, reqs=spec_reqs(),
+               speculative=True, spec_gamma=2)
+    spec_row = rows[-1]
+    assert spec_row["stream_digest"] == exact_row["stream_digest"], \
+        (spec_row["stream_digest"], exact_row["stream_digest"])
+    assert spec_row["tokens_per_dispatch"] > _MACRO_TICKS, \
+        spec_row["tokens_per_dispatch"]
+    assert spec_row["draft_acceptance_rate"] >= 0.5, \
+        spec_row["draft_acceptance_rate"]
+    for key, unit in (("draft_acceptance_rate", "ratio"),
+                      ("draft_tokens_proposed", "tokens"),
+                      ("tokens_per_dispatch", "ratio")):
+        results.append(BenchResult(
+            f"serving/spec_constant_state/load{spec_load:g}/{key}",
+            float(spec_row[key]), unit,
+            extra={"regime": "spec_constant_state", "load": spec_load}))
 
     if chaos:
         _chaos_rows(cs_cfg, cs_params, mesh, p, load, cs_outs,

@@ -23,6 +23,14 @@ byte-identity:
 
     PYTHONPATH=src python examples/serve.py --attn-kind softmax \\
         --page-size 16 --prefix-cache 64
+
+Speculative decoding (DESIGN.md §13) — the linear SLAY regime drafts
+gamma tokens per slot, the exact verifier scores them in one chunked
+dispatch, and the accept/resample correction keeps the emitted streams
+byte-identical to plain exact decode at temperature 0 (and exactly
+verifier-distributed when sampled):
+
+    PYTHONPATH=src python examples/serve.py --speculative --spec-gamma 2
 """
 import argparse
 import time
@@ -68,9 +76,27 @@ def main():
                          "MB (DESIGN.md §11); 0 = off. Repeated/shared "
                          "prompt prefixes seed their slot from a stored "
                          "snapshot instead of re-prefilling")
+    ap.add_argument("--speculative", action="store_true",
+                    help="draft-verify decode (DESIGN.md §13): linear SLAY "
+                         "drafts, the exact verifier scores gamma+1 tokens "
+                         "per dispatch. Needs an exact attn kind; defaults "
+                         "the verifier to yat_spherical if --attn-kind is "
+                         "not given")
+    ap.add_argument("--spec-gamma", type=int, default=2,
+                    help="draft tokens per speculative round")
     args = ap.parse_args()
+    if args.speculative and args.prefix_cache:
+        ap.error("--speculative and --prefix-cache are mutually exclusive "
+                 "(DESIGN.md §13)")
+    if args.speculative and args.lockstep:
+        ap.error("--speculative needs the continuous engine")
 
     overrides = {"attn_kind": args.attn_kind} if args.attn_kind else {}
+    if args.speculative and not args.attn_kind:
+        # Exact verifier + a deliberately small SLAY draft trunk so the
+        # demo's draft steps stay cheap on CPU.
+        overrides = {"attn_kind": "yat_spherical",
+                     "slay_anchors": 16, "slay_prf": 32}
     cfg = configs.get_smoke_config(args.arch, **overrides)
     params = api.init_params(cfg, jax.random.PRNGKey(0))
     # DESIGN §8 walkthrough, step 1 — the mesh: the `data` axis carries
@@ -110,7 +136,9 @@ def main():
                                   slot_shards=args.slot_shards,
                                   max_queue=args.max_queue,
                                   overload_policy=args.overload_policy,
-                                  page_size=args.page_size))
+                                  page_size=args.page_size,
+                                  speculative=args.speculative,
+                                  spec_gamma=args.spec_gamma))
         # Typed admission (DESIGN.md §10): a refused request raises an
         # AdmissionError subclass carrying queue_depth/max_queue, so a
         # caller can back off or report precisely — no message parsing.
@@ -145,6 +173,14 @@ def main():
             print(f"  prefix cache: {summary['prefix_hits']} hits, "
                   f"{summary['prefix_tokens_reused']} prompt tokens "
                   f"reused | {pc.stats()}")
+        # DESIGN §13: draft-verify amortization — one verifier dispatch
+        # emits up to K * (gamma + 1) tokens.
+        if summary["speculative"]:
+            print(f"  speculative: gamma={summary['spec_gamma']} | "
+                  f"acceptance {summary['draft_acceptance_rate']:.3f} "
+                  f"({summary['draft_tokens_accepted']}/"
+                  f"{summary['draft_tokens_proposed']} drafts) | "
+                  f"{summary['tokens_per_dispatch']:.1f} tok/dispatch")
     dt = time.perf_counter() - t0
     total = sum(len(o) for o in outs)
     for i, o in enumerate(outs):

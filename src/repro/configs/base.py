@@ -215,6 +215,17 @@ class ServingConfig:
     suffix (LRU-evicted under this byte budget; streams stay
     byte-identical cached-vs-cold).
 
+    Speculative decoding (DESIGN.md §13): ``speculative=True`` turns each
+    of the K macro-ticks into a draft-verify *round* — the linear SLAY
+    draft proposes ``spec_gamma`` tokens per slot, the exact verifier
+    scores all of them in one ``verify_chunk`` dispatch, and standard
+    accept/resample correction keeps the output distribution exactly the
+    verifier's (greedy streams byte-identical to plain greedy decode).
+    Requires a verifier config with ``api.supports_speculative`` (a
+    non-windowed exact quadratic kind); the prefix cache is mutually
+    exclusive with it for now (a seeded verifier slot has no draft-side
+    snapshot).
+
     Durability (DESIGN.md §12): ``checkpoint_every_ticks > 0`` makes an
     engine constructed with a write-ahead ``journal=`` also write an
     atomic checkpoint every N engine ticks (at macro-step boundaries);
@@ -244,6 +255,8 @@ class ServingConfig:
     num_pages: int = 0                # 0 = auto (num_slots * max_len / page)
     prefix_cache_bytes: int = 0       # 0 = prefix cache off; else LRU budget
     checkpoint_every_ticks: int = 0   # 0 = no periodic engine checkpoints
+    speculative: bool = False         # draft-verify decode (DESIGN.md §13)
+    spec_gamma: int = 2               # draft tokens per speculative round
     debug_audit: bool = False         # invariant audit at end of run()
 
     def __post_init__(self):
@@ -286,6 +299,13 @@ class ServingConfig:
             raise ValueError("prefix_cache_bytes must be >= 0")
         if self.checkpoint_every_ticks < 0:
             raise ValueError("checkpoint_every_ticks must be >= 0 (0 = off)")
+        if self.spec_gamma < 1:
+            raise ValueError("spec_gamma must be >= 1")
+        if self.speculative and self.prefix_cache_bytes:
+            raise ValueError(
+                "speculative decoding and the prefix cache are mutually "
+                "exclusive (a prefix-seeded verifier slot has no draft-side "
+                "snapshot to seed from)")
 
 
 @dataclasses.dataclass(frozen=True)

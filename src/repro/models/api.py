@@ -8,6 +8,8 @@
 """
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 
 from repro.configs.base import ArchConfig
@@ -191,3 +193,58 @@ def decode_step(params, cfg: ArchConfig, cache, tokens, active=None):
     output (their logits are meaningless — callers sample active rows
     only), so the pool dispatch stays one fixed-shape jitted call."""
     return _mod(cfg).decode_step(params, cfg, cache, tokens, active)
+
+
+# -- Speculative decoding surface (DESIGN.md §13) ---------------------------
+
+
+def supports_speculative(cfg: ArchConfig) -> bool:
+    """Whether ``cfg`` can verify draft-verify speculative decoding:
+    a non-windowed exact quadratic ring (rollback = ``pos`` rewind) whose
+    params differ from the linear SLAY draft's only by the tiny ``slay``
+    projection entry (one pytree serves both regimes)."""
+    return cfg.family != "encdec" and transformer.supports_speculative(cfg)
+
+
+def draft_config(cfg: ArchConfig) -> ArchConfig:
+    """The linear-SLAY draft twin of a verifier config: same architecture,
+    ``attn_kind="slay"`` — the paper's linearization of the verifier's own
+    kernel, which is what makes its proposals land (high acceptance)."""
+    return dataclasses.replace(cfg, attn_kind="slay")
+
+
+def ensure_draft_params(draft_cfg: ArchConfig, params: dict) -> dict:
+    """Add the draft's ``slay`` projection entry to a verifier params tree.
+
+    The draft shares every transformer weight with the verifier; only the
+    SLAY anchor/omega random projections are extra. They are derived from
+    a fixed key so the draft — and therefore sampled spec streams — is
+    deterministic per checkpoint, never per process. (Draft quality only
+    affects acceptance rate, not output distribution.)"""
+    if "slay" in params:
+        return params
+    from repro.core.slay import slay_init
+    params = dict(params)
+    params["slay"] = slay_init(jax.random.PRNGKey(0),
+                               draft_cfg.slay_config())
+    return params
+
+
+def verify_chunk(cfg: ArchConfig, params, cache, tokens, active=None):
+    """Score ``Lc`` candidate tokens per slot in one exact dispatch:
+    tokens (B, Lc) -> (logits (B, Lc, V), advanced cache). Row j is the
+    verifier's distribution after absorbing tokens[:, :j+1]; ``active``
+    masks drained slots exactly like ``decode_step``."""
+    return transformer.verify_chunk(params, cfg, cache, tokens, active)
+
+
+def slot_positions(cfg: ArchConfig, cache) -> jax.Array:
+    """(B,) int32 per-slot absorbed-context horizons."""
+    return cache.pos
+
+
+def rollback_slots(cfg: ArchConfig, cache, new_pos):
+    """Rewind per-slot horizons to ``new_pos`` (B,) — the rejected-suffix
+    rollback: a pure ``pos`` rewind, no ring bytes move, page table
+    untouched (see transformer.rollback_slots)."""
+    return transformer.rollback_slots(cfg, cache, new_pos)

@@ -846,6 +846,121 @@ def prefill_chunk(params: dict, cfg: ArchConfig, cache: DecodeCache,
                                            cache.pos + Lc, cache.pages)
 
 
+def supports_speculative(cfg: ArchConfig) -> bool:
+    """Whether a config can be the *verifier* of draft-verify speculative
+    decoding (DESIGN.md §13).
+
+    Two structural requirements: (1) rejected-suffix rollback must be a
+    pure per-slot ``pos`` rewind, which holds only for a non-windowed
+    exact quadratic KV ring (validity is derived from ``pos``; stale rows
+    past the accept horizon become invisible and are overwritten in
+    place) — linear kinds fold tokens irreversibly into the (S, z)
+    accumulator and SSM/hybrid carries cannot un-absorb a step; (2) the
+    draft swap (``attn_kind -> "slay"``) must leave the rest of the
+    parameter tree identical so one params pytree serves both regimes,
+    which rules out encdec and modality frontends. Windowed/mixed-window
+    rings are excluded with (1): an in-window eviction is not rewindable.
+    """
+    if cfg.family in ("ssm", "hybrid", "encdec") or cfg.frontend:
+        return False
+    if cfg.local_window or cfg.local_global_period:
+        return False
+    return not cfg.attention_spec().is_linear
+
+
+def verify_chunk(params: dict, cfg: ArchConfig, cache: DecodeCache,
+                 tokens: jnp.ndarray,
+                 active: jnp.ndarray | None = None
+                 ) -> tuple[jnp.ndarray, DecodeCache]:
+    """Score a candidate token block: tokens (B, Lc) -> logits (B, Lc, V).
+
+    The speculative verifier (DESIGN.md §13): same §9-exact chunked
+    continuation as :func:`prefill_chunk`, but returning the *full*
+    per-position logits — row j is the verifier's next-token distribution
+    after absorbing tokens[:, :j+1] on top of the cached prefix — and
+    masking per slot like :func:`decode_step`: drained slots pass their
+    cache bytes and ``pos`` through untouched (paged slots scatter their
+    own gathered rows back unchanged). The advanced cache has absorbed
+    all ``Lc`` candidates; the caller rewinds to the accept horizon with
+    :func:`rollback_slots`.
+    """
+    B, Lc = tokens.shape
+    x = embed(params["embed"], tokens).astype(cfg.activation_dtype)
+    positions = cache.pos[:, None] + jnp.arange(Lc, dtype=jnp.int32)[None, :]
+    act = None if active is None else active.astype(bool)
+    slay_params = params.get("slay")
+
+    # Verifier configs are single-spec (supports_speculative excludes
+    # local/global mixes), so no per-layer kind dispatch here.
+    def body(x, scanned):
+        lp = scanned["params"]
+        new = {}
+        xa = rmsnorm(lp["pre_attn"], x)
+        q = jnp.einsum("bld,dhk->blhk", xa, lp["attn"]["wq"])
+        k = jnp.einsum("bld,dhk->blhk", xa, lp["attn"]["wk"])
+        v = jnp.einsum("bld,dhk->blhk", xa, lp["attn"]["wv"])
+        if cfg.qk_norm:
+            q = rmsnorm(lp["attn"]["q_norm"], q)
+            k = rmsnorm(lp["attn"]["k_norm"], k)
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+        spec_g = cfg.attention_spec(local=False)
+        ac = scanned["attn"]
+        if cache.pages is not None:
+            # Paged pool (§11): gather -> exact chunk update -> per-slot
+            # passthrough on the *dense* view (leaves stay (B, ...)) ->
+            # scatter. A drained slot's pages get their own gathered rows
+            # written back — byte-identical, so "untouched" holds.
+            pg = _pages_mod()
+            dense = ac._replace(k=pg.gather_ring(ac.k, cache.pages),
+                                v=pg.gather_ring(ac.v, cache.pages))
+            y, nd = attn.prefill_chunk(spec_g, slay_params, q, k, v, dense)
+            nd = _state_passthrough(nd, dense, act)
+            nac = nd._replace(
+                k=pg.scatter_ring(ac.k, nd.k, cache.pages),
+                v=pg.scatter_ring(ac.v, nd.v, cache.pages))
+        else:
+            y, nac = attn.prefill_chunk(spec_g, slay_params, q, k, v, ac)
+            nac = _state_passthrough(nac, ac, act)
+        a = jnp.einsum("blhk,hkd->bld", y, lp["attn"]["wo"])
+        new["attn"] = nac
+        x = x + a
+        xm = rmsnorm(lp["pre_mlp"], x)
+        if cfg.moe_experts:
+            y2, _ = moe(lp["moe"], xm, cfg.moe_experts, cfg.moe_top_k)
+        else:
+            y2 = mlp(lp["mlp"], xm, cfg.gated_mlp)
+        return x + y2, new
+
+    scanned = {"params": params["layers"], "attn": cache.attn}
+    x, new = jax.lax.scan(body, x, scanned)
+    x = rmsnorm(params["final_norm"], x)
+    table = params.get("unembed", params["embed"])
+    logits = unembed(table, x, cfg.final_logit_softcap)
+    step = Lc if act is None else Lc * act.astype(jnp.int32)
+    return logits, DecodeCache(new["attn"], cache.ssm, cache.pos + step,
+                               cache.pages)
+
+
+def rollback_slots(cfg: ArchConfig, cache: DecodeCache,
+                   new_pos: jnp.ndarray) -> DecodeCache:
+    """Rewind per-slot context horizons to ``new_pos`` (B,) int32 (§13).
+
+    KV-ring validity is derived from ``pos`` alone (attention masks rows
+    at or beyond the horizon), so rejecting a speculative suffix moves no
+    ring bytes: rows past the accept horizon become invisible and the
+    next absorb overwrites them in place. A paged pool's page table is
+    untouched — admission sized the slot's pages for the full horizon
+    plus verify overshoot, so there is nothing to free (and nothing that
+    can leak; the §11 audit checks the table, not row contents).
+    """
+    new_pos = new_pos.astype(jnp.int32)
+    a = cache.attn
+    if a is not None:
+        a = a._replace(pos=jnp.broadcast_to(new_pos[None, :], a.pos.shape))
+    return DecodeCache(a, cache.ssm, new_pos, cache.pages)
+
+
 def _merge_cache(template: attn.AttnCache, new: attn.AttnCache):
     """Fill unused union-cache slots from the template so pytree structure
     stays constant across mixed local/linear layers."""

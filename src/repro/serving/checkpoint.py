@@ -124,6 +124,16 @@ def snapshot_engine(eng) -> dict:
     journaled admission at restore (same chunk schedule, same stream).
     """
     pool_leaves = [np.asarray(x) for x in jax.device_get(jax.tree.leaves(eng.pool))]
+    # Speculative mode (§13): the draft pool is live decode state too — a
+    # resident slot resumed without its draft twin would draft from zeros
+    # (still correct output, but a silent acceptance-rate cliff), so it is
+    # captured and restored alongside the verifier pool.
+    draft_leaves = None
+    if getattr(eng, "draft_pool", None) is not None:
+        draft_leaves = [
+            np.asarray(x)
+            for x in jax.device_get(jax.tree.leaves(eng.draft_pool))
+        ]
     mirrors = {
         "last_tok": np.asarray(eng._last_tok).copy(),
         "active": np.asarray(eng._active).copy(),
@@ -177,7 +187,10 @@ def snapshot_engine(eng) -> dict:
         "max_len": int(eng.serving.max_len),
         "page_size": int(eng.serving.page_size) if eng.page_pool is not None else 0,
         "seed": int(eng.serving.seed),
+        "speculative": bool(getattr(eng, "_spec", False)),
+        "spec_gamma": int(eng.serving.spec_gamma) if getattr(eng, "_spec", False) else 0,
         "pool": pool_leaves,
+        "draft_pool": draft_leaves,
         "mirrors": mirrors,
         "slots": slots,
         "page_pool": page_snap,

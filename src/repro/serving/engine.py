@@ -63,6 +63,7 @@ from repro.serving import journal as journal_lib
 from repro.serving import pages as pages_lib
 from repro.serving import prefix_cache as prefix_lib
 from repro.serving import sampling
+from repro.serving import speculative
 
 
 def jit_serve_fns(cfg: ArchConfig, mesh, max_len: int,
@@ -414,6 +415,16 @@ class ServingMetrics:
     # checkpoints_written counts atomic engine checkpoints.
     tokens_replayed: int = 0    # journal-deduped regenerated tokens (count)
     checkpoints_written: int = 0  # atomic checkpoints written (count)
+    # Speculative decoding counters (DESIGN.md §13). Proposed counts every
+    # draft token offered to the verifier in a counted (non-faulted, slot-
+    # active) round; accepted counts those that survived the accept test.
+    # Emitted tokens exceed accepted ones — each round also emits a
+    # corrected-or-bonus token — which is why tokens_per_dispatch can beat
+    # macro_ticks even at acceptance < 1.
+    speculative: bool = False   # engine is in draft-verify mode
+    spec_gamma: int = 0         # draft tokens per round (0 = non-spec)
+    draft_tokens_proposed: int = 0  # draft tokens offered to the verifier
+    draft_tokens_accepted: int = 0  # draft tokens accepted
     # Injectable time source (satellite of DESIGN.md §12): every wall-
     # clock read in the engine goes through this, so deadline tests use a
     # fake clock and journal timestamps are replayable.
@@ -503,6 +514,12 @@ class ServingMetrics:
             "num_pages": self.num_pages,
             "pages_in_use": self.pages_in_use,
             "pages_peak": self.pages_peak,
+            "speculative": self.speculative,
+            "spec_gamma": self.spec_gamma,
+            "draft_tokens_proposed": self.draft_tokens_proposed,
+            "draft_tokens_accepted": self.draft_tokens_accepted,
+            "draft_acceptance_rate": self.draft_tokens_accepted
+            / max(self.draft_tokens_proposed, 1),
         }
 
 
@@ -530,6 +547,7 @@ class _Prefill:
     offset: int = 0                  # prompt tokens absorbed so far
     prefix_offset: int = 0           # pre-embedded frontend rows absorbed
     logits: object | None = None     # (1, 1, V) — full prefix-cache hit
+    draft: object | None = None      # batch=1 draft cache (speculative mode)
 
 
 class Scheduler:
@@ -805,8 +823,39 @@ class ContinuousServingEngine:
                             and api.supports_masked_prefill(cfg))
         self._seen_buckets: set[int] = set()
 
-        axes = api.param_axes(cfg)
-        p_abs = api.abstract_params(cfg)
+        # Speculative decoding (DESIGN.md §13): the engine holds TWO slot
+        # pools over one params pytree — the linear SLAY draft pool
+        # (constant-state, never paged) and the exact verifier pool (the
+        # ordinary `self.pool`, paged or not). Draft and verifier slots
+        # move in lockstep: admission prefills and installs both, decode
+        # runs spec rounds, eviction resets both.
+        self._spec = bool(serving.speculative)
+        self.draft_cfg: ArchConfig | None = None
+        self.draft_pool = None
+        if self._spec:
+            if not api.supports_speculative(cfg):
+                raise ValueError(
+                    f"speculative decoding needs a verifier config with "
+                    f"api.supports_speculative (a non-windowed exact "
+                    f"quadratic attention kind); got attn_kind="
+                    f"{cfg.attn_kind!r}, family={cfg.family!r}")
+            self.draft_cfg = api.draft_config(cfg)
+            params = api.ensure_draft_params(self.draft_cfg, params)
+            self.params = params
+            self.metrics.speculative = True
+            self.metrics.spec_gamma = serving.spec_gamma
+            # Mutually exclusive with the prefix cache (config validates
+            # the byte-budget knob; a shared instance is dropped too): a
+            # prefix snapshot seeds only the verifier ring — the draft
+            # pool would have no matching state to seed from.
+            self.prefix_cache = None
+
+        # Param shapes/axes: in speculative mode the draft config's tree
+        # is the superset (same transformer weights + the tiny `slay`
+        # projection entry the verifier ignores), so it drives placement.
+        axes_cfg = self.draft_cfg if self._spec else cfg
+        axes = api.param_axes(axes_cfg)
+        p_abs = api.abstract_params(axes_cfg)
         # Params replicate over the slot (data) axes at serving time —
         # FSDP-sharded weights would all-gather inside every decode tick
         # (DESIGN.md §8 zero-collective contract).
@@ -860,6 +909,37 @@ class ContinuousServingEngine:
             in_shardings=(p_sh, c_sh) + (v_sh,) * 6,
             out_shardings=(c_sh, buf_sh, buf_sh, buf_sh),
             donate_argnums=(1,))
+        # Speculative decode hot loop (§13): K draft-verify rounds per
+        # dispatch over both pools, (K, gamma+1, S) token/emitted/fault
+        # buffers plus a (K, S) accepted-count plane — still one host
+        # pull per dispatch, same zero-collective slot partitioning.
+        self._draft_sharding = None
+        self._spec_fn = None
+        if self._spec:
+            d_abs = api.abstract_cache(self.draft_cfg, S, L)
+            d_sh = shd.serving_cache_sharding(
+                mesh, rules, d_abs, num_slots=S,
+                slot_shards=serving.slot_shards)
+            self._draft_sharding = d_sh
+            self._draft_abstract = d_abs
+            buf2_sh = shd.serving_vector_sharding(
+                mesh, rules, num_slots=S, slot_shards=serving.slot_shards,
+                leading=2)
+            with mesh:
+                self.draft_pool = jax.device_put(
+                    api.init_cache(self.draft_cfg, S, L), d_sh)
+            self._spec_fn = jax.jit(
+                functools.partial(speculative.spec_macro,
+                                  draft_cfg=self.draft_cfg, cfg=cfg,
+                                  num_rounds=serving.macro_ticks,
+                                  gamma=serving.spec_gamma,
+                                  temperature=serving.temperature,
+                                  seed=serving.seed,
+                                  fault_guard=serving.fault_guard),
+                in_shardings=(p_sh, d_sh, c_sh) + (v_sh,) * 6,
+                out_shardings=(d_sh, c_sh, buf2_sh, buf2_sh, buf2_sh,
+                               buf_sh),
+                donate_argnums=(1, 2))
         self._sample_fn = jax.jit(
             functools.partial(sampling.sample_tokens,
                               temperature=serving.temperature,
@@ -915,6 +995,28 @@ class ContinuousServingEngine:
             lambda p, b: api.prefill(p, cfg, b, max_len=L))
         self._prefill_masked_fn = jax.jit(
             lambda p, b, n: api.prefill(p, cfg, b, max_len=L, true_len=n))
+        if self._spec:
+            # Draft-pool twins of the slot/prefill ops. The draft pool is
+            # never paged (constant-state — nothing to page), so these are
+            # always the unpaged shapes.
+            dcfg = self.draft_cfg
+            d_sh = self._draft_sharding
+            self._dwrite_fn = jax.jit(
+                lambda pool, src, i: api.write_slot(dcfg, pool, src, i),
+                in_shardings=(d_sh, rep_sh, None), out_shardings=d_sh,
+                donate_argnums=(0,))
+            self._dreset_fn = jax.jit(
+                lambda pool, i: api.reset_slot(dcfg, pool, i),
+                in_shardings=(d_sh, None), out_shardings=d_sh,
+                donate_argnums=(0,))
+            self._dchunk_fn = jax.jit(
+                lambda p, c, t: api.prefill_chunk(dcfg, p, c, t),
+                donate_argnums=(1,))
+            self._dprefill_fn = jax.jit(
+                lambda p, b: api.prefill(p, dcfg, b, max_len=L))
+            self._dprefill_masked_fn = jax.jit(
+                lambda p, b, n: api.prefill(p, dcfg, b, max_len=L,
+                                            true_len=n))
         if journal is not None and journal.nbytes == 0:
             # Fresh journal: stamp the sampling/geometry contract once.
             # restore() refuses a journal whose stream keying or sampling
@@ -923,7 +1025,12 @@ class ContinuousServingEngine:
                 "t": "meta", "v": journal_lib.JOURNAL_VERSION,
                 "stream_key_v": sampling.STREAM_KEY_VERSION,
                 "seed": serving.seed, "temperature": serving.temperature,
-                "num_slots": S, "max_len": L})
+                "num_slots": S, "max_len": L,
+                # §13: sampled spec streams consume different substreams
+                # than plain decode, so restore must not cross modes (and
+                # gamma changes which indices take the bonus base draw).
+                "speculative": self._spec,
+                "spec_gamma": serving.spec_gamma if self._spec else 0})
             journal.flush()
 
     # -- submission ---------------------------------------------------------
@@ -949,6 +1056,12 @@ class ContinuousServingEngine:
         prefix = (self.cfg.num_patches
                   if self.cfg.frontend == "vision" else 0)
         need = prefix + len(req.prompt) + req.max_new_tokens
+        if self._spec:
+            # Verify overshoot (§13): a round writes up to spec_gamma ring
+            # rows past the accept horizon before rolling back, so the
+            # slot needs that much extra headroom to never wrap onto live
+            # context.
+            need += self.serving.spec_gamma
         # Capacity is per config kind (api.context_capacity): None means
         # unbounded — constant-state decode (linear SLAY, SSM carries) or
         # an exactly-wrapping windowed ring — so an oversized prompt (e.g.
@@ -966,7 +1079,10 @@ class ContinuousServingEngine:
                 f"request does not fit its decode slot: "
                 + (f"{prefix} vision-prefix patches + " if prefix else "")
                 + f"{len(req.prompt)} prompt + {req.max_new_tokens} "
-                f"max_new = {need} > context capacity {cap} "
+                f"max_new "
+                + (f"+ {self.serving.spec_gamma} spec verify headroom "
+                   if self._spec else "")
+                + f"= {need} > context capacity {cap} "
                 f"(the cache ring would overwrite live context; shorten "
                 f"the prompt/max_new_tokens or raise ServingConfig."
                 f"max_len)",
@@ -1030,7 +1146,10 @@ class ContinuousServingEngine:
                 self.tick += 1
                 did = True
             elif sched.active:
-                self._decode_macro()
+                if self._spec:
+                    self._decode_spec()
+                else:
+                    self._decode_macro()
                 did = True
             else:
                 self.metrics.sample(sched.queue_depth, sched.occupancy)
@@ -1153,6 +1272,18 @@ class ContinuousServingEngine:
                     f"(seed={meta.get('seed')}, temperature="
                     f"{meta.get('temperature')}); restore with the same "
                     "seed/temperature or streams diverge")
+            if "speculative" in meta and (
+                    bool(meta["speculative"]) != bool(serving.speculative)
+                    or int(meta.get("spec_gamma", 0))
+                    != (serving.spec_gamma if serving.speculative else 0)):
+                # §13: sampled spec streams consume tagged substreams and
+                # the bonus-index pattern depends on gamma, so crossing
+                # modes (or gammas) would regenerate different tokens.
+                raise ValueError(
+                    "journal was written under a different speculative "
+                    f"config (speculative={meta['speculative']}, "
+                    f"spec_gamma={meta.get('spec_gamma')}); restore with "
+                    "the same speculative/spec_gamma or streams diverge")
         ck = checkpoint_lib.latest_valid(path)
         jr = journal_lib.Journal(jpath, truncate_to=jst.valid_bytes)
         eng = cls(cfg, params, mesh, serving=serving, rules=rules,
@@ -1172,7 +1303,10 @@ class ContinuousServingEngine:
             and int(ck.get("num_slots", -1)) == S
             and int(ck.get("max_len", -1)) == self.serving.max_len
             and int(ck.get("page_size", -1))
-            == (self.serving.page_size if self._paged else 0))
+            == (self.serving.page_size if self._paged else 0)
+            and bool(ck.get("speculative", False)) == self._spec
+            and int(ck.get("spec_gamma", 0))
+            == (self.serving.spec_gamma if self._spec else 0))
         if usable:
             cur = jax.tree.leaves(self.pool)
             saved = ck["pool"]
@@ -1180,6 +1314,13 @@ class ContinuousServingEngine:
                 tuple(c.shape) == tuple(s.shape)
                 and np.dtype(c.dtype) == np.dtype(s.dtype)
                 for c, s in zip(cur, saved)))
+        if usable and self._spec:
+            dcur = jax.tree.leaves(self.draft_pool)
+            dsaved = ck.get("draft_pool") or []
+            usable = (len(dcur) == len(dsaved) and all(
+                tuple(c.shape) == tuple(s.shape)
+                and np.dtype(c.dtype) == np.dtype(s.dtype)
+                for c, s in zip(dcur, dsaved)))
         resident: dict[int, int] = {}       # rid -> slot
         if usable:
             treedef = jax.tree.structure(self.pool)
@@ -1188,6 +1329,14 @@ class ContinuousServingEngine:
                     jax.tree.unflatten(
                         treedef, [jnp.asarray(x) for x in ck["pool"]]),
                     self._cache_sharding)
+            if self._spec:
+                dtree = jax.tree.structure(self.draft_pool)
+                with self.mesh:
+                    self.draft_pool = jax.device_put(
+                        jax.tree.unflatten(
+                            dtree,
+                            [jnp.asarray(x) for x in ck["draft_pool"]]),
+                        self._draft_sharding)
             mir = ck["mirrors"]
             self._last_tok = np.asarray(mir["last_tok"], np.int32).copy()
             self._active = np.asarray(mir["active"], bool).copy()
@@ -1331,10 +1480,17 @@ class ContinuousServingEngine:
 
     def _need_rows(self, req: Request) -> int:
         """Context rows a request occupies: frontend prefix + prompt +
-        decode budget (what the page allocator sizes a slot's pages by)."""
+        decode budget (what the page allocator sizes a slot's pages by) —
+        plus, in speculative mode, ``spec_gamma`` verify-overshoot rows
+        (§13: a round's ring writes reach past the accept horizon before
+        rolling back; the pages for those rows are allocated up front so
+        rollback never touches the page table and nothing can leak)."""
         prefix = (self.cfg.num_patches
                   if self.cfg.frontend == "vision" else 0)
-        return prefix + len(req.prompt) + req.max_new_tokens
+        need = prefix + len(req.prompt) + req.max_new_tokens
+        if self._spec:
+            need += self.serving.spec_gamma
+        return need
 
     def _note_pages(self):
         self.metrics.pages_in_use = self.page_pool.pages_in_use()
@@ -1383,6 +1539,11 @@ class ContinuousServingEngine:
             rid, req, slot = admission
             pf = _Prefill(rid, req, slot,
                           api.init_cache(self.cfg, 1, self.serving.max_len))
+            if self._spec:
+                # Dual-cache residency (§13): the draft twin absorbs the
+                # same prompt so both regimes enter decode in agreement.
+                pf.draft = api.init_cache(self.draft_cfg, 1,
+                                          self.serving.max_len)
             if self.page_pool is not None:
                 # Host-side reservation only: the device PageState learns
                 # the mapping at install (write_slot) time, so an
@@ -1418,6 +1579,8 @@ class ContinuousServingEngine:
             chunk = prompt[pf.offset:pf.offset + C]
             toks = jnp.asarray(chunk[None, :])
             logits, pf.cache = self._chunk_fn(self.params, pf.cache, toks)
+            if self._spec:
+                _, pf.draft = self._dchunk_fn(self.params, pf.draft, toks)
             pf.offset += len(chunk)
             if (self.prefix_cache is not None and pf.offset % C == 0
                     and pf.offset < len(prompt)):
@@ -1448,10 +1611,15 @@ class ContinuousServingEngine:
             tl = jnp.full((1,), prefix + len(prompt), jnp.int32)
             logits, pf.cache = self._prefill_masked_fn(self.params, batch,
                                                        tl)
+            if self._spec:
+                _, pf.draft = self._dprefill_masked_fn(self.params, batch,
+                                                       tl)
             pf.offset = len(prompt)
         else:
             batch = _model_batch(self.cfg, jnp.asarray(prompt[None, :]))
             logits, pf.cache = self._prefill_fn(self.params, batch)
+            if self._spec:
+                _, pf.draft = self._dprefill_fn(self.params, batch)
             pf.offset = len(prompt)
         if pf.offset < len(prompt):
             return                       # more chunks; decode may interleave
@@ -1475,6 +1643,9 @@ class ContinuousServingEngine:
         else:
             self.pool = self._write_fn(self.pool, pf.cache,
                                        jnp.int32(pf.slot))
+        if self._spec:
+            self.draft_pool = self._dwrite_fn(self.draft_pool, pf.draft,
+                                              jnp.int32(pf.slot))
         self._prefill = None
         self.metrics.prompt_tokens += (
             len(prompt) - self.metrics.per_request[pf.rid].prefix_tokens)
@@ -1537,6 +1708,69 @@ class ContinuousServingEngine:
             # removed its slot from residency by the time we get here.
             self._lifecycle_sweep()
 
+    def _decode_spec(self):
+        """One speculative dispatch = K draft-verify rounds (§13); replay
+        the (K, gamma+1, S) token buffer on host one round per tick.
+
+        A round is one engine tick (one scheduling quantum) emitting up to
+        gamma+1 tokens per slot, so the per-tick contracts — streaming
+        callbacks in emission order, quarantine before emission, the
+        lifecycle sweep after — run exactly like the plain macro-step's
+        replay; only the tokens-per-tick arithmetic changes. Still one
+        host sync per dispatch."""
+        G = self.serving.spec_gamma
+        self.draft_pool, self.pool, toks, em, flt, acc = self._spec_fn(
+            self.params, self.draft_pool, self.pool,
+            jnp.asarray(self._last_tok), jnp.asarray(self._active),
+            jnp.asarray(self._rids), jnp.asarray(self._gen),
+            jnp.asarray(self._eos), jnp.asarray(self._maxn))
+        self.metrics.decode_dispatches += 1
+        toks, em, flt, acc = (np.asarray(toks), np.asarray(em),
+                              np.asarray(flt), np.asarray(acc))
+        self.metrics.host_syncs += 1      # ONE host sync per K rounds
+        for r in range(toks.shape[0]):
+            if not (em[r].any() or flt[r].any()):
+                break   # every slot drained mid-dispatch; suffix unused
+            self.sched.poll_arrivals(self.tick)
+            self.metrics.sample(self.sched.queue_depth,
+                                self.sched.occupancy)
+            # Quarantine before emission — a faulted round emitted nothing
+            # (device side: its verifier rewound to the round start, its
+            # draft kept the snapshot; the flag rides row 0 only).
+            for slot in np.nonzero(flt[r, 0])[0]:
+                if int(slot) in self.sched.active:
+                    self._quarantine(int(slot))
+            # Acceptance accounting: acc[r, s] >= 0 is a counted round
+            # (slot active, not faulted) that offered G drafts.
+            for slot in range(acc.shape[1]):
+                v = int(acc[r, slot])
+                if v >= 0:
+                    self.metrics.draft_tokens_proposed += G
+                    self.metrics.draft_tokens_accepted += v
+            for j in range(toks.shape[1]):
+                if not em[r, j].any():
+                    break   # per-slot emissions are a j-prefix: done
+                for slot in list(self.sched.active):
+                    if not em[r, j, slot]:
+                        continue
+                    rec = self.sched.active.get(slot)
+                    if rec is None:   # cancelled by an earlier callback
+                        continue
+                    tk = int(toks[r, j, slot])
+                    rec.last_tok = tk
+                    self._last_tok[slot] = tk
+                    self._gen[slot] += 1
+                    self._emit(rec, tk, int(self._gen[slot]) - 1)
+                    if (tk == rec.req.eos_id
+                            or len(rec.tokens) >= rec.req.max_new_tokens):
+                        self._finish(slot, sampling.finish_reason_of(
+                            tk, rec.req.eos_id))
+            self.sched.note_decode()
+            self.metrics.decode_ticks += 1
+            self.tick += 1
+            self.metrics.ticks = self.tick
+            self._lifecycle_sweep()
+
     def jit_cache_entries(self) -> dict:
         """Live jit-cache entry counts per engine entry point — the
         recompile budget CI asserts on (the decode hot loop must stay at
@@ -1552,6 +1786,11 @@ class ContinuousServingEngine:
                "chunk_embeds": self._chunk_embeds_fn,
                "prefill": self._prefill_fn,
                "prefill_masked": self._prefill_masked_fn}
+        if self._spec:
+            fns.update({"spec_macro": self._spec_fn,
+                        "draft_write": self._dwrite_fn,
+                        "draft_reset": self._dreset_fn,
+                        "draft_chunk": self._dchunk_fn})
         out = {}
         for name, fn in fns.items():
             try:
@@ -1571,8 +1810,13 @@ class ContinuousServingEngine:
         i32 = jax.ShapeDtypeStruct((S,), jnp.int32)
         b1 = jax.ShapeDtypeStruct((S,), jnp.bool_)
         with self.mesh:
-            lowered = self._macro_fn.lower(p_abs, c_abs, i32, b1, i32, i32,
-                                           i32, i32)
+            if self._spec:
+                lowered = self._spec_fn.lower(
+                    p_abs, self._draft_abstract, c_abs, i32, b1, i32, i32,
+                    i32, i32)
+            else:
+                lowered = self._macro_fn.lower(p_abs, c_abs, i32, b1, i32,
+                                               i32, i32, i32)
         return lowered.compile().as_text()
 
     def _emit(self, rec: _Slot, tok: int, idx: int):
@@ -1624,6 +1868,9 @@ class ContinuousServingEngine:
                                        self.page_pool.device_vectors())
         else:
             self.pool = self._reset_fn(self.pool, jnp.int32(slot))
+        if self._spec:
+            self.draft_pool = self._dreset_fn(self.draft_pool,
+                                              jnp.int32(slot))
 
     def _finish(self, slot: int, reason: str):
         """Evict a slot-resident request into terminal state ``reason``."""

@@ -78,6 +78,44 @@ def _gumbel_row(seed: int, rid, idx, vocab: int) -> jnp.ndarray:
     return jax.random.gumbel(key, (vocab,), jnp.float32)
 
 
+# Speculative-decoding substreams (DESIGN.md §13). Each token index needs
+# up to three *independent* draws — the draft proposal, the accept coin,
+# and the rejection resample — so each gets its own stream derived from
+# the same (seed, rid, idx) base key by one extra ``fold_in`` tag. The
+# *bonus* token (emitted when every draft in a round is accepted) uses the
+# untagged base stream — i.e. exactly the draw plain decode would make —
+# which is part of what keeps greedy spec streams byte-identical to plain
+# greedy decode. Covered by STREAM_KEY_VERSION: any change here changes
+# sampled spec streams and must bump it.
+SPEC_TAG_DRAFT = 1
+SPEC_TAG_ACCEPT = 2
+SPEC_TAG_RESAMPLE = 3
+
+
+def spec_key(seed: int, rid, idx, tag: int):
+    """Threefry key for a speculative substream of (seed, rid, idx).
+
+    Placement-invariant for the same reason the base stream is: derived
+    only from the request id and token index, never from slot, shard, or
+    round boundary.
+    """
+    return jax.random.fold_in(
+        jax.random.fold_in(
+            jax.random.fold_in(jax.random.PRNGKey(seed), rid), idx), tag)
+
+
+def spec_gumbel_row(seed: int, rid, idx, tag: int, vocab: int) -> jnp.ndarray:
+    """Gumbel(0,1) row on a speculative substream; fp32, (vocab,)."""
+    return jax.random.gumbel(spec_key(seed, rid, idx, tag), (vocab,),
+                             jnp.float32)
+
+
+def spec_uniform(seed: int, rid, idx) -> jnp.ndarray:
+    """The accept coin u ~ U[0,1) for token index ``idx``; fp32 scalar."""
+    return jax.random.uniform(spec_key(seed, rid, idx, SPEC_TAG_ACCEPT),
+                              (), jnp.float32)
+
+
 def sample_tokens(logits: jnp.ndarray, rids: jnp.ndarray,
                   idxs: jnp.ndarray, *, temperature: float,
                   seed: int) -> jnp.ndarray:

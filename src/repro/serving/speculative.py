@@ -1,0 +1,254 @@
+"""Draft-verify speculative decoding on the two-regime engine (DESIGN.md §13).
+
+The repo holds both of the paper's regimes behind one slot API: linear
+SLAY decode carries O(1) constant state per slot (the cheap *draft*), and
+the exact quadratic yat kinds score a whole token chunk in one dispatch
+via the §9 chunked-prefill continuation (the *verifier*). A speculative
+round drafts ``gamma`` tokens per slot with the linear model, scores all
+``gamma + 1`` positions with the exact model in a single ``verify_chunk``
+dispatch, and applies the standard accept/resample correction — so the
+emitted distribution equals the verifier's exactly, while each round can
+emit up to ``gamma + 1`` tokens for one verifier evaluation.
+
+Determinism contract (the serving.sampling one, extended): every draw is
+keyed on (seed, rid, token-index) plus a substream tag — the draft
+proposal, the accept coin, and the rejection resample are independent
+streams of the same base key, and the *bonus* token (all drafts accepted)
+uses the untagged base stream. Nothing keys on slot, shard, macro-step
+size, or round boundary, so accepted streams are placement-, K-, and
+shard-invariant for a fixed ``gamma``. Greedy (temperature <= 0) collapses
+to "accept iff the draft equals the verifier argmax, emit the verifier
+argmax either way": every emitted token is the verifier's argmax given the
+emitted prefix, i.e. greedy spec streams are byte-identical to greedy
+exact decode for *any* draft and any ``gamma`` — provided the verifier's
+fp32 argmax is unique at every emitted position (an *exact* top-2 logit
+tie may be broken differently by the differently-shaped decode-step and
+verify-chunk XLA programs; measure-zero for trained weights, see
+DESIGN.md §13).
+
+Rollback composes with the rest of the serving stack because KV-ring
+validity is derived from per-slot ``pos`` alone: rejecting a suffix is a
+``pos`` rewind (``api.rollback_slots``), stale rows past the accept
+horizon are invisible and get overwritten in place, and a paged pool's
+page table is untouched (admission already sized the slot's pages for the
+full horizon plus ``gamma`` overshoot rows — zero pages to free, zero to
+leak). The draft pool re-absorbs exactly the emitted tokens from its
+round-start snapshot, so both regimes agree on the context after every
+round.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import api
+from repro.serving import sampling
+
+
+# ---------------------------------------------------------------------------
+# Pure acceptance math (vectorized over slots; also the test harness's
+# statistical-contract surface — see tests/test_speculative.py)
+# ---------------------------------------------------------------------------
+
+
+def draft_sample(logits: jnp.ndarray, rids: jnp.ndarray, idxs: jnp.ndarray,
+                 *, temperature: float, seed: int) -> jnp.ndarray:
+    """Draft proposal: logits (S, V) -> tokens (S,) drawn from
+    softmax(logits / T) on the DRAFT substream (Gumbel-max), or the plain
+    fp32 argmax when greedy. Mirrors :func:`sampling.sample_tokens` but on
+    an independent stream: the proposal must never consume the verifier's
+    (seed, rid, idx) base draw."""
+    logits = logits.astype(jnp.float32)
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    vocab = logits.shape[-1]
+    g = jax.vmap(lambda r, i: sampling.spec_gumbel_row(
+        seed, r, i, sampling.SPEC_TAG_DRAFT, vocab))(rids, idxs)
+    return jnp.argmax(logits / temperature + g, axis=-1).astype(jnp.int32)
+
+
+def accept_and_correct(p_logits: jnp.ndarray, q_logits: jnp.ndarray,
+                       drafts: jnp.ndarray, rids: jnp.ndarray,
+                       idxs: jnp.ndarray, *, temperature: float,
+                       seed: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """One draft position's accept/resample correction, per slot.
+
+    p_logits/q_logits (S, V) are the verifier's and draft's logits for the
+    same token index; ``drafts`` (S,) the proposed tokens. Returns
+    ``(accept (S,) bool, corrected (S,) int32)`` where ``corrected`` is
+    the token to emit *instead* on rejection.
+
+    Sampled (T > 0): accept with probability min(1, p(d)/q(d)) on the
+    ACCEPT coin; on rejection emit a draw from normalize(max(p - q, 0))
+    on the RESAMPLE substream. Marginalizing over the draft proposal, the
+    emitted token is distributed exactly softmax(p_logits / T) — the
+    standard speculative-sampling identity the chi-square harness checks
+    empirically.
+
+    Greedy (T <= 0): accept iff the draft *is* the verifier argmax;
+    ``corrected`` is that argmax — so the emitted token is the verifier
+    argmax in both branches.
+    """
+    p_logits = p_logits.astype(jnp.float32)
+    if temperature <= 0.0:
+        top = jnp.argmax(p_logits, axis=-1).astype(jnp.int32)
+        return drafts == top, top
+    q_logits = q_logits.astype(jnp.float32)
+    p = jax.nn.softmax(p_logits / temperature, axis=-1)
+    q = jax.nn.softmax(q_logits / temperature, axis=-1)
+    pd = jnp.take_along_axis(p, drafts[:, None], axis=-1)[:, 0]
+    qd = jnp.take_along_axis(q, drafts[:, None], axis=-1)[:, 0]
+    u = jax.vmap(lambda r, i: sampling.spec_uniform(seed, r, i))(rids, idxs)
+    # u < min(1, pd/qd), division-free: u in [0, 1) so u*qd < pd is the
+    # same event and stays exact when p == q (always accept).
+    accept = u * qd < pd
+    r = jnp.maximum(p - q, 0.0)
+    # Gumbel-max over log-residuals; zero-residual entries are -inf and
+    # can never win. All-zero residual (p == q elementwise) is unreachable
+    # — acceptance is then certain — so the argmax fallback row there is
+    # irrelevant; it just must not be NaN.
+    logr = jnp.where(r > 0, jnp.log(jnp.maximum(r, 1e-38)), -jnp.inf)
+    vocab = p.shape[-1]
+    g = jax.vmap(lambda rr, i: sampling.spec_gumbel_row(
+        seed, rr, i, sampling.SPEC_TAG_RESAMPLE, vocab))(rids, idxs)
+    corrected = jnp.argmax(logr + g, axis=-1).astype(jnp.int32)
+    return accept, corrected
+
+
+# ---------------------------------------------------------------------------
+# The jitted speculative macro-step (the engine's decode hot loop in
+# speculative mode — one dispatch = K rounds, each up to gamma+1 tokens)
+# ---------------------------------------------------------------------------
+
+
+def spec_macro(params, draft_pool, pool, last_tok, active, rids, gen,
+               eos_ids, max_new, *, draft_cfg: ArchConfig, cfg: ArchConfig,
+               num_rounds: int, gamma: int, temperature: float, seed: int,
+               fault_guard: bool = True):
+    """K speculative rounds as one jitted ``lax.scan`` over the slot pool.
+
+    Per round and per active slot: (1) the linear draft pool runs
+    ``gamma`` masked decode steps proposing d_1..d_gamma; (2) the exact
+    pool scores the ``gamma + 1`` inputs [last_tok, d_1..d_gamma] in one
+    ``verify_chunk`` — the §9-exact chunked continuation — yielding the
+    verifier distribution for every proposed index plus the bonus
+    position; (3) accept/resample correction picks the emitted tokens
+    e_1..e_m (m <= gamma+1: the accepted prefix, then one corrected or
+    bonus token), truncated at EOS/budget exactly like the plain
+    macro-step; (4) the verifier rewinds to the accept horizon (``pos``
+    rewind — stale ring rows become invisible) and the draft re-absorbs
+    the emitted tokens from its round-start snapshot, so both caches
+    agree on the context entering the next round.
+
+    The fault lane mirrors ``_macro_decode``: per-slot finiteness of both
+    pools and of the verifier logits, checked on device, zero extra host
+    syncs. A faulted slot emits nothing for the round (its verifier
+    rewinds to the round start, its draft keeps the snapshot) and is
+    flagged in the fault plane for host quarantine.
+
+    Returns ``(draft_pool, pool, toks, em, flt, acc)`` with token/emitted/
+    fault buffers shaped (K, gamma+1, S) — the host replays them row-major
+    exactly like the (K, S) macro buffers — and ``acc`` (K, S) int32: the
+    per-round accepted-draft count, or -1 where the slot ran no round
+    (drained or faulted), for the draft_acceptance_rate accounting.
+    """
+    G = gamma
+    S = last_tok.shape[0]
+
+    def round_(carry, _):
+        dpool, vpool, last_tok, act, gen = carry
+
+        # (1) draft phase: G masked decode steps on the linear pool.
+        def draft_step(c, j):
+            dp, tok = c
+            logits, dp = api.decode_step(params, draft_cfg, dp,
+                                         tok[:, None], act)
+            row = logits[:, -1, :]
+            nxt = draft_sample(row, rids, gen + j, temperature=temperature,
+                               seed=seed)
+            nxt = jnp.where(act, nxt, tok)
+            return (dp, nxt), (nxt, row)
+
+        (dp_end, _), (drafts, q_rows) = jax.lax.scan(
+            draft_step, (dpool, last_tok), jnp.arange(G))
+
+        # (2) verify phase: one exact chunk over [last_tok, d_1..d_G].
+        vt = jnp.concatenate([last_tok[None, :], drafts], axis=0).T
+        p_logits, vp_adv = api.verify_chunk(cfg, params, vpool, vt,
+                                            active=act)
+
+        # (3) acceptance + correction, position by position (vmapped —
+        # each position has its own token index, hence its own keys).
+        def acc_one(p_row, q_row, d, j):
+            return accept_and_correct(p_row, q_row, d, rids, gen + j,
+                                      temperature=temperature, seed=seed)
+
+        accs, corr = jax.vmap(acc_one, in_axes=(1, 0, 0, 0))(
+            p_logits[:, :G], q_rows, drafts, jnp.arange(G))
+        # Bonus token: the untagged base stream — the draw plain decode
+        # would make at this index (greedy: the verifier argmax).
+        bonus = sampling.sample_tokens(p_logits[:, G, :], rids, gen + G,
+                                       temperature=temperature, seed=seed)
+        jj = jnp.arange(G + 1)[:, None]                         # (G+1, 1)
+        a = jnp.sum(jnp.cumprod(accs.astype(jnp.int32), 0), 0)  # (S,)
+        cand = jnp.concatenate([corr, bonus[None, :]], axis=0)  # (G+1, S)
+        dpad = jnp.concatenate(
+            [drafts, jnp.zeros((1, S), jnp.int32)], axis=0)
+        e = jnp.where(jj < a[None, :], dpad, cand)              # (G+1, S)
+        emit = (jj <= a[None, :]) & act[None, :]
+        gen_j = gen[None, :] + jj + 1
+        hitj = emit & sampling.stop_hit(e, gen_j, eos_ids[None, :],
+                                        max_new[None, :])
+        cs = jnp.cumsum(hitj.astype(jnp.int32), axis=0)
+        emit = emit & ((cs - hitj.astype(jnp.int32)) == 0)
+
+        # Fault lane: both pools' fresh state + the verifier logits.
+        if fault_guard:
+            ok = (api.slot_state_finite(cfg, vp_adv)
+                  & api.slot_state_finite(draft_cfg, dp_end)
+                  & jnp.all(jnp.isfinite(p_logits.astype(jnp.float32)),
+                            axis=(1, 2)))
+            faulted = act & jnp.logical_not(ok)
+        else:
+            ok = jnp.ones_like(act)
+            faulted = jnp.zeros_like(act)
+        emit = emit & ok[None, :]
+        m = jnp.sum(emit.astype(jnp.int32), axis=0)             # (S,)
+        stopped = jnp.any(hitj & emit, axis=0)
+
+        # (4a) verifier rollback to the accept horizon: keep exactly the
+        # absorbed context [last_tok, e_1..e_{m-1}] — by construction the
+        # kept ring rows hold the right inputs (e_j = d_j on the accepted
+        # prefix), so only ``pos`` moves.
+        pos0 = api.slot_positions(cfg, vpool)
+        vp_new = api.rollback_slots(cfg, vp_adv, pos0 + m)
+
+        # (4b) draft resync from the round-start snapshot: absorb the
+        # same m inputs, masked per slot per step — covers every case up
+        # to full-accept-plus-bonus (m = G+1 inputs: last_tok, e_1..e_G).
+        sync_in = jnp.concatenate([last_tok[None, :], e[:-1]], axis=0)
+        step_act = jj < m[None, :]
+
+        def sync_step(dp, xs):
+            inp, sa = xs
+            _, dp = api.decode_step(params, draft_cfg, dp, inp[:, None], sa)
+            return dp, None
+
+        dp_new, _ = jax.lax.scan(sync_step, dpool, (sync_in, step_act))
+
+        e_out = jnp.where(emit, e, last_tok[None, :])
+        last2 = jnp.take_along_axis(
+            e_out, jnp.maximum(m - 1, 0)[None, :], axis=0)[0]
+        last_new = jnp.where(m > 0, last2, last_tok)
+        gen_new = gen + m
+        act_new = act & ok & jnp.logical_not(stopped)
+        acc_out = jnp.where(act & ok, a, -1)
+        flt = jnp.zeros_like(emit).at[0].set(faulted)
+        return ((dp_new, vp_new, last_new, act_new, gen_new),
+                (e_out, emit, flt, acc_out))
+
+    (dpool, vpool, _, _, _), (toks, em, flt, acc) = jax.lax.scan(
+        round_, (draft_pool, pool, last_tok, active, gen), None,
+        length=num_rounds)
+    return dpool, vpool, toks, em, flt, acc

@@ -12,6 +12,25 @@ import pytest
 # setdefault so REPRO_DEBUG_AUDIT=0 can still switch it off locally.
 os.environ.setdefault("REPRO_DEBUG_AUDIT", "1")
 
+# Seed guard: the byte-identity and sampling-contract suites (DESIGN.md
+# §12-13) only mean anything if every random draw in the tests is pinned.
+# Fail fast on a fresh unseeded generator instead of letting a flaky
+# test land. (The audit also covers jax.random — PRNGKey requires an
+# explicit seed by construction — and hypothesis, which is derandomized
+# in test_properties.py.)
+_real_default_rng = np.random.default_rng
+
+
+def _seeded_default_rng(seed=None, *args, **kwargs):
+    if seed is None:
+        raise AssertionError(
+            "np.random.default_rng() without an explicit seed in a test: "
+            "pin the draw (see tests/conftest.py seed guard)")
+    return _real_default_rng(seed, *args, **kwargs)
+
+
+np.random.default_rng = _seeded_default_rng
+
 
 @pytest.fixture
 def rng():

@@ -19,7 +19,9 @@ from repro.core import quadrature as qd
 from repro.core.features import (SlayFeatureConfig, init_feature_params,
                                  normalize, slay_features)
 
-_settings = settings(max_examples=25, deadline=None)
+# derandomize: hypothesis otherwise draws fresh examples per run — the
+# one unpinned randomness source the conftest seed guard can't see.
+_settings = settings(max_examples=25, deadline=None, derandomize=True)
 
 
 @given(x=st.floats(-1.0, 1.0), eps=st.floats(1e-4, 1.0))

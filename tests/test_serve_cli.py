@@ -1,0 +1,51 @@
+"""Smoke tests for the examples/serve.py CLI: the demo must keep working
+end-to-end as engine features land, since it's the documented entry point
+for the DESIGN.md walkthroughs (§8 sharding, §11 paging/prefix cache,
+§13 speculative decoding). Each case runs the script in a fresh process
+and asserts exit 0 plus the feature's summary lines."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+pytestmark = pytest.mark.serving
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+_SERVE = os.path.join(_ROOT, "examples", "serve.py")
+
+
+def _run(*args, env_extra=None, check=True):
+    env = dict(os.environ, PYTHONPATH=os.path.join(_ROOT, "src"))
+    env.update(env_extra or {})
+    proc = subprocess.run(
+        [sys.executable, _SERVE, "--max-new", "6", "--batch", "3", *args],
+        capture_output=True, text=True, timeout=600, env=env, cwd=_ROOT)
+    if check:
+        assert proc.returncode == 0, proc.stdout + proc.stderr
+    return proc
+
+
+def test_cli_sharded_paged_prefix_cache():
+    """--slot-shards/--page-size/--prefix-cache together (fresh process so
+    the forced 4-device CPU runtime doesn't leak into other tests)."""
+    proc = _run("--attn-kind", "softmax", "--slot-shards", "4",
+                "--slots", "4", "--page-size", "16", "--prefix-cache", "8",
+                env_extra={
+                    "XLA_FLAGS": "--xla_force_host_platform_device_count=4"})
+    assert "finish reasons:" in proc.stdout
+    assert "4 shard(s)" in proc.stdout
+    assert "pages:" in proc.stdout and "prefix cache:" in proc.stdout
+
+
+def test_cli_speculative():
+    proc = _run("--speculative", "--spec-gamma", "2")
+    assert "finish reasons:" in proc.stdout
+    assert "speculative: gamma=2" in proc.stdout
+    assert "tok/dispatch" in proc.stdout
+
+
+def test_cli_speculative_rejects_prefix_cache():
+    proc = _run("--speculative", "--prefix-cache", "8", check=False)
+    assert proc.returncode != 0
+    assert "mutually exclusive" in proc.stderr

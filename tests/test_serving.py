@@ -376,7 +376,8 @@ def test_serving_bench_smoke_emits_json(tmp_path, monkeypatch):
                                        "ssm_scan", "hybrid_scan",
                                        "constant_state_sharded",
                                        "kv_ring_paged", "prefix_cold",
-                                       "prefix_cached"}
+                                       "prefix_cached", "exact_yat",
+                                       "spec_constant_state"}
     # Scan-carry families serve via chunked prefill — fallback retired.
     for r in rows:
         if r["regime"] in ("ssm_scan", "hybrid_scan"):
@@ -404,3 +405,11 @@ def test_serving_bench_smoke_emits_json(tmp_path, monkeypatch):
     assert cold["prefix_hit_rate"] == 0.0
     assert warm["prefix_hit_rate"] == 1.0
     assert warm["ttft_ticks_p50"] < cold["ttft_ticks_p50"]
+    # §13 byte-identity: the draft-verify row's accepted streams replay
+    # the exact-yat baseline on the pinned contract trace.
+    spec = next(r for r in rows if r["regime"] == "spec_constant_state")
+    exact = next(r for r in rows if r["regime"] == "exact_yat"
+                 and r["load"] == spec["load"])
+    assert spec["stream_digest"] == exact["stream_digest"]
+    assert spec["draft_acceptance_rate"] >= 0.5
+    assert spec["tokens_per_dispatch"] > exact["tokens_per_dispatch"]
