@@ -1,0 +1,18 @@
+"""Static contract analysis for the serving stack (DESIGN.md §14).
+
+Three passes, one finding type, one committed suppressions baseline:
+
+* :mod:`repro.analysis.hlo` — parse compiled HLO text into an op-level
+  table and check the §8 zero-collective decode contract, the no-host-
+  callback contract, and donation aliasing (``input_output_alias``).
+* :mod:`repro.analysis.jitlint` — AST rule engine over the repo source:
+  host syncs reachable from jit regions, unseeded RNG, wall-clock reads
+  outside the injectable-clock surface, fold_in substream-tag collisions.
+* :mod:`repro.analysis.vmem` — per-kernel VMEM footprint from the Pallas
+  BlockSpecs, gated against the §3 per-core budget and a committed
+  per-kernel baseline.
+
+Everything flows through :class:`repro.analysis.findings.Finding`;
+``tools/lint_contracts.py`` is the CLI the static-analysis CI job runs.
+"""
+from repro.analysis.findings import Finding  # noqa: F401

@@ -1,0 +1,130 @@
+"""The one finding type every analysis pass emits, plus the committed
+suppressions baseline (DESIGN.md §14).
+
+A :class:`Finding` is a rule violation at a location. The repo starts
+clean: ``tools/lint_contracts.py --all`` must exit 0, so any finding that
+cannot be fixed immediately needs a *justified* entry in the committed
+baseline (``src/repro/analysis/baseline.json``). New violations therefore
+fail CI by default — the baseline only ever shrinks (stale entries are
+reported so they get deleted when the underlying code is fixed).
+
+Baseline schema::
+
+    {"suppressions": [
+        {"rule": "SYNC001", "path": "src/repro/foo.py",
+         "symbol": "bar", "reason": "why this is acceptable"}
+    ]}
+
+``path`` is repo-relative (posix). ``symbol`` is optional; when present
+the finding's symbol must match exactly. ``reason`` is mandatory — an
+unexplained suppression is itself rejected.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation.
+
+    rule     stable id (catalog in DESIGN.md §14), e.g. ``SYNC001``.
+    path     repo-relative posix path — or a virtual label like
+             ``decode_hlo[slay]`` for compiled-artifact passes.
+    line     1-based line (0 when the pass has no line notion).
+    message  human-readable description of the violation.
+    symbol   the offending function/kernel/op name (suppression key).
+    """
+
+    rule: str
+    path: str
+    line: int
+    message: str
+    symbol: str = ""
+
+    def render(self) -> str:
+        loc = f"{self.path}:{self.line}" if self.line else self.path
+        sym = f" [{self.symbol}]" if self.symbol else ""
+        return f"{self.rule} {loc}{sym}: {self.message}"
+
+
+@dataclasses.dataclass(frozen=True)
+class Suppression:
+    rule: str
+    path: str
+    reason: str
+    symbol: str = ""
+
+    def matches(self, f: Finding) -> bool:
+        if self.rule != f.rule or self.path != f.path:
+            return False
+        return (not self.symbol) or self.symbol == f.symbol
+
+
+def load_baseline(path: str) -> list[Suppression]:
+    """Load and validate the committed suppressions baseline."""
+    with open(path) as fh:
+        raw = json.load(fh)
+    out = []
+    for i, e in enumerate(raw.get("suppressions", [])):
+        for k in ("rule", "path", "reason"):
+            if not e.get(k):
+                raise ValueError(f"baseline entry {i} missing {k!r}: {e}")
+        out.append(Suppression(rule=e["rule"], path=e["path"],
+                               reason=e["reason"],
+                               symbol=e.get("symbol", "")))
+    return out
+
+
+def apply_baseline(findings: list[Finding], sups: list[Suppression]):
+    """Split findings into (unsuppressed, suppressed); also return the
+    stale suppressions that matched nothing (candidates for deletion)."""
+    unsuppressed, suppressed = [], []
+    used: set[int] = set()
+    for f in findings:
+        hit = None
+        for i, s in enumerate(sups):
+            if s.matches(f):
+                hit = i
+                break
+        if hit is None:
+            unsuppressed.append(f)
+        else:
+            used.add(hit)
+            suppressed.append(f)
+    stale = [s for i, s in enumerate(sups) if i not in used]
+    return unsuppressed, suppressed, stale
+
+
+def format_table(findings: list[Finding], title: str = "Findings") -> str:
+    """GitHub-flavoured markdown table (for GITHUB_STEP_SUMMARY)."""
+    lines = [f"### {title}", ""]
+    if not findings:
+        lines.append("No findings.")
+        return "\n".join(lines) + "\n"
+    lines += ["| rule | location | symbol | message |",
+              "| --- | --- | --- | --- |"]
+    for f in findings:
+        loc = f"{f.path}:{f.line}" if f.line else f.path
+        msg = f.message.replace("|", "\\|")
+        lines.append(f"| {f.rule} | `{loc}` | `{f.symbol or '-'}` "
+                     f"| {msg} |")
+    return "\n".join(lines) + "\n"
+
+
+def repo_root() -> str:
+    """Repo root (three levels above this package)."""
+    return os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__)))))
+
+
+def relpath(path: str, root: str | None = None) -> str:
+    """Repo-relative posix path for stable finding/suppression keys."""
+    root = root or repo_root()
+    return os.path.relpath(os.path.abspath(path), root).replace(os.sep, "/")
+
+
+DEFAULT_BASELINE = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                "baseline.json")

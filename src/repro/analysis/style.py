@@ -1,0 +1,106 @@
+"""Minimal style pass — the in-container ruff fallback (DESIGN.md §14).
+
+ruff is the configured linter (``ruff.toml``: line-length 88, E/F/W) but
+is not installable inside the CI container (CHANGES.md PR 2). This pass
+re-implements the three rules that actually catch regressions here, so
+``tools/lint_contracts.py --all`` can gate style even where ruff cannot
+run. It is deliberately a subset — when ruff *is* available it remains
+authoritative.
+
+STY001  line longer than 88 characters (≈ E501).
+STY002  trailing whitespace (≈ W291/W293).
+STY003  module-level import never referenced again in the file (≈ F401),
+        conservative: skipped for ``__init__.py`` re-exports, ``# noqa``
+        lines, and ``__future__``/side-effect imports.
+"""
+from __future__ import annotations
+
+import ast
+import tokenize
+
+from repro.analysis.findings import Finding
+
+MAX_LINE = 88
+
+
+def _unused_imports(src: str, path: str) -> list[Finding]:
+    if path.endswith("__init__.py"):
+        return []
+    try:
+        tree = ast.parse(src, filename=path)
+    except SyntaxError:
+        return []
+    lines = src.splitlines()
+    # name -> (lineno, display) for module-level imports only.
+    imported: dict[str, tuple[int, str]] = {}
+    for node in tree.body:
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                bound = a.asname or a.name.split(".")[0]
+                imported[bound] = (node.lineno, a.name)
+        elif isinstance(node, ast.ImportFrom):
+            if node.module == "__future__":
+                continue
+            for a in node.names:
+                if a.name == "*":
+                    continue
+                bound = a.asname or a.name
+                imported[bound] = (node.lineno,
+                                   f"{node.module or '.'}.{a.name}")
+    if not imported:
+        return []
+    used: set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Name):
+            used.add(node.id)
+        elif isinstance(node, ast.Attribute):
+            base = node
+            while isinstance(base, ast.Attribute):
+                base = base.value
+            if isinstance(base, ast.Name):
+                used.add(base.id)
+    # Names referenced in __all__ strings count as used.
+    for node in ast.walk(tree):
+        if (isinstance(node, ast.Constant)
+                and isinstance(node.value, str)):
+            used.add(node.value)
+    out = []
+    for bound, (lineno, display) in sorted(imported.items(),
+                                           key=lambda kv: kv[1][0]):
+        if bound in used:
+            continue
+        line = lines[lineno - 1] if lineno <= len(lines) else ""
+        if "noqa" in line:
+            continue
+        out.append(Finding(
+            rule="STY003", path=path, line=lineno, symbol=bound,
+            message=f"import {display!r} is never used"))
+    return out
+
+
+def scan_source(src: str, path: str) -> list[Finding]:
+    findings = []
+    for lineno, line in enumerate(src.splitlines(), start=1):
+        if len(line) > MAX_LINE and "noqa" not in line:
+            findings.append(Finding(
+                rule="STY001", path=path, line=lineno,
+                message=f"line is {len(line)} chars (> {MAX_LINE})"))
+        if line != line.rstrip():
+            findings.append(Finding(
+                rule="STY002", path=path, line=lineno,
+                message="trailing whitespace"))
+    findings += _unused_imports(src, path)
+    return findings
+
+
+def scan_files(files) -> list[Finding]:
+    """``files`` is an iterable of (abs-path, repo-relative-path)."""
+    findings = []
+    for full, rel in files:
+        try:
+            with tokenize.open(full) as fh:
+                src = fh.read()
+        except (OSError, SyntaxError):
+            continue
+        findings += scan_source(src, rel)
+    return sorted(findings, key=lambda f: (f.path, f.line, f.rule))

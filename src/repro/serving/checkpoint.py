@@ -171,7 +171,8 @@ def snapshot_engine(eng) -> dict:
                 {
                     "tokens": np.asarray(ent.tokens, np.int32),
                     "length": int(ent.length),
-                    "cache": [np.asarray(x) for x in jax.device_get(jax.tree.leaves(ent.cache))],
+                    "cache": [np.asarray(x) for x in jax.device_get(
+                        jax.tree.leaves(ent.cache))],
                     "logits": (
                         np.asarray(jax.device_get(ent.logits))
                         if ent.logits is not None
@@ -188,7 +189,8 @@ def snapshot_engine(eng) -> dict:
         "page_size": int(eng.serving.page_size) if eng.page_pool is not None else 0,
         "seed": int(eng.serving.seed),
         "speculative": bool(getattr(eng, "_spec", False)),
-        "spec_gamma": int(eng.serving.spec_gamma) if getattr(eng, "_spec", False) else 0,
+        "spec_gamma": (int(eng.serving.spec_gamma)
+                       if getattr(eng, "_spec", False) else 0),
         "pool": pool_leaves,
         "draft_pool": draft_leaves,
         "mirrors": mirrors,

@@ -1802,9 +1802,10 @@ class ContinuousServingEngine:
     def decode_hlo(self) -> str:
         """Compiled HLO of the decode macro-step at the engine's shapes and
         shardings — the §8 zero-collective contract surface: on a slot-
-        sharded mesh this text must contain no all-reduce / all-gather /
-        reduce-scatter / collective-permute / all-to-all (the sharded-
-        parity tests grep it). Compiles (cached) but never executes."""
+        sharded mesh the op table must contain no collective opcodes
+        (``repro.analysis.hlo.parse_hlo`` + ``check_no_collectives`` is
+        how the sharded-parity tests assert it — parsed opcodes, not
+        substring greps). Compiles (cached) but never executes."""
         p_abs, c_abs = self._abstract
         S = self.serving.num_slots
         i32 = jax.ShapeDtypeStruct((S,), jnp.int32)
@@ -1818,6 +1819,48 @@ class ContinuousServingEngine:
                 lowered = self._macro_fn.lower(p_abs, c_abs, i32, b1, i32,
                                                i32, i32, i32)
         return lowered.compile().as_text()
+
+    def contract_lowerings(self) -> dict:
+        """Compiled HLO text + expected donated-leaf count for every
+        ``donate_argnums`` engine entry point — the DESIGN.md §14 contract
+        surface the HLO analyzer checks (zero collectives, no host
+        callbacks, and every donated leaf actually aliased in
+        ``input_output_alias``; XLA drops unusable donations *silently*,
+        which would double the pool's HBM footprint with no error).
+
+        Returns ``{name: (compiled_hlo_text, expected_donated_leaves)}``.
+        ``write_slot``/``reset_slot`` are only lowered for unpaged pools —
+        the paged variants take a live host ``PageState`` snapshot that
+        has no static abstract here. Compiles (cached) but never
+        executes."""
+        p_abs, c_abs = self._abstract
+        S, L = self.serving.num_slots, self.serving.max_len
+        i32 = jax.ShapeDtypeStruct((S,), jnp.int32)
+        b1 = jax.ShapeDtypeStruct((S,), jnp.bool_)
+        scalar = jax.ShapeDtypeStruct((), jnp.int32)
+        cache_leaves = len(jax.tree.leaves(c_abs))
+        out = {}
+        with self.mesh:
+            if self._spec:
+                lowered = self._spec_fn.lower(
+                    p_abs, self._draft_abstract, c_abs, i32, b1, i32, i32,
+                    i32, i32)
+                donated = cache_leaves + len(
+                    jax.tree.leaves(self._draft_abstract))
+            else:
+                lowered = self._macro_fn.lower(p_abs, c_abs, i32, b1, i32,
+                                               i32, i32, i32)
+                donated = cache_leaves
+            out["macro_decode"] = (lowered.compile().as_text(), donated)
+            if not self._paged:
+                src_abs = api.abstract_cache(self.cfg, 1, L)
+                lowered = self._write_fn.lower(c_abs, src_abs, scalar)
+                out["write_slot"] = (lowered.compile().as_text(),
+                                     cache_leaves)
+                lowered = self._reset_fn.lower(c_abs, scalar)
+                out["reset_slot"] = (lowered.compile().as_text(),
+                                     cache_leaves)
+        return out
 
     def _emit(self, rec: _Slot, tok: int, idx: int):
         """Deliver one emitted token. ``idx`` is the request's token index

@@ -12,24 +12,15 @@ import pytest
 # setdefault so REPRO_DEBUG_AUDIT=0 can still switch it off locally.
 os.environ.setdefault("REPRO_DEBUG_AUDIT", "1")
 
-# Seed guard: the byte-identity and sampling-contract suites (DESIGN.md
-# §12-13) only mean anything if every random draw in the tests is pinned.
-# Fail fast on a fresh unseeded generator instead of letting a flaky
-# test land. (The audit also covers jax.random — PRNGKey requires an
-# explicit seed by construction — and hypothesis, which is derandomized
-# in test_properties.py.)
-_real_default_rng = np.random.default_rng
-
-
-def _seeded_default_rng(seed=None, *args, **kwargs):
-    if seed is None:
-        raise AssertionError(
-            "np.random.default_rng() without an explicit seed in a test: "
-            "pin the draw (see tests/conftest.py seed guard)")
-    return _real_default_rng(seed, *args, **kwargs)
-
-
-np.random.default_rng = _seeded_default_rng
+# Seed discipline: the byte-identity and sampling-contract suites
+# (DESIGN.md §12-13) only mean anything if every random draw is pinned.
+# This used to be a runtime monkeypatch of np.random.default_rng here
+# (tests-only, and blind to src/ and benchmarks/); it is now the RNG001
+# rule of the static jit-safety linter (repro.analysis.jitlint, DESIGN.md
+# §14), which covers src/, benchmarks/, tests/ and tools/ at CI time via
+# `tools/lint_contracts.py --all`. (jax.random needs no guard — PRNGKey
+# requires an explicit seed by construction — and hypothesis is
+# derandomized in test_properties.py.)
 
 
 @pytest.fixture

@@ -1,0 +1,19 @@
+"""Known-bad jitlint fixture: a host sync hidden one call deep inside a
+``lax.scan`` body. The linter must follow the call graph from the scan
+root through ``_body`` into ``_leaf`` and flag the ``.item()`` there —
+exactly one SYNC001. (Excluded from real scans: tests/fixtures/ is in
+``jitlint.Options.exclude_parts``.)"""
+import jax
+import jax.numpy as jnp
+
+
+def _leaf(x):
+    return x.item()            # SYNC001: host sync in a jit region
+
+
+def _body(carry, x):
+    return carry + _leaf(x), None
+
+
+def run(xs):
+    return jax.lax.scan(_body, jnp.float32(0), xs)

@@ -1,0 +1,6 @@
+"""Known-bad jitlint fixture: two fold_in substream-tag constants with
+the same value in one package — the (seed, rid, idx) substreams would
+coincide (DESIGN.md §13). Exactly one TAG001 on the second constant."""
+
+SPEC_TAG_ALPHA = 7
+SPEC_TAG_BETA = 7                      # TAG001: collides with ALPHA

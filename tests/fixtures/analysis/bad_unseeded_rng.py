@@ -1,0 +1,9 @@
+"""Known-bad jitlint fixture: a fresh unseeded generator — exactly one
+RNG001 (the follow-up draw on the generator object is not itself a
+violation)."""
+import numpy as np
+
+
+def draw():
+    rng = np.random.default_rng()      # RNG001: unseeded
+    return rng.normal()

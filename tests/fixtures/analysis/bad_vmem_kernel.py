@@ -1,0 +1,23 @@
+"""Known-bad VMEM fixture: one pallas_call whose BlockSpecs pull the
+whole (4096, 4096) fp32 operand into VMEM per grid step — 64 MiB in +
+64 MiB out (× 2 for double buffering), far over the ~16 MiB §3 budget.
+Probed by the analyzer test through ``vmem.record_pallas_calls``; never
+executed."""
+import jax
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def oversized_copy(x):
+    n, d = x.shape
+    return pl.pallas_call(
+        _kernel,
+        grid=(1,),
+        in_specs=[pl.BlockSpec((n, d), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((n, d), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), x.dtype),
+        interpret=True,
+    )(x)

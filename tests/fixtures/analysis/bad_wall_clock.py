@@ -1,0 +1,13 @@
+"""Known-bad jitlint fixture: a wall-clock *call* in a body (CLK001 when
+the test points ``Options.clock_paths`` at this directory). The default
+parameter value is the allowed injectable-clock surface — it is a
+reference, not a call, and must NOT be flagged."""
+import time
+
+
+def allowed(clock=time.perf_counter):  # reference: the injectable surface
+    return clock()
+
+
+def stamp():
+    return time.time()                 # CLK001: bypasses the injection

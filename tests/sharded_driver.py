@@ -18,7 +18,6 @@ from __future__ import annotations
 
 import argparse
 import os
-import re
 import sys
 
 import jax
@@ -31,13 +30,23 @@ sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(
 
 from benchmarks.serving_bench import _poisson_trace as _bench_trace  # noqa: E402,E501
 from repro import configs  # noqa: E402
+from repro.analysis import hlo as hlo_lib  # noqa: E402
 from repro.configs.base import ServingConfig  # noqa: E402
 from repro.launch.mesh import make_serving_mesh  # noqa: E402
 from repro.models import api  # noqa: E402
 from repro.serving.engine import ContinuousServingEngine  # noqa: E402
 
-_COLLECTIVES = re.compile(
-    r"all-reduce|all-gather|reduce-scatter|collective-permute|all-to-all")
+
+def _assert_collective_free(hlo_text: str, label: str) -> int:
+    """§8 contract via the op-level analyzer (not a substring grep —
+    parsed opcodes catch async forms like ``all-gather-start`` and don't
+    trip on fusion *names* that merely mention a collective). Also holds
+    the no-host-callback line (§14 HLO002). Returns the op count."""
+    module = hlo_lib.parse_hlo(hlo_text)
+    findings = (hlo_lib.check_no_collectives(module, label)
+                + hlo_lib.check_no_host_ops(module, label))
+    assert not findings, "\n".join(f.render() for f in findings)
+    return len(module.instructions)
 
 
 def _setup(attn_kind="slay"):
@@ -182,10 +191,9 @@ def check_collectives():
             serving=ServingConfig(num_slots=4, max_len=64, prefill_chunk=4,
                                   macro_ticks=8))
         assert eng.slot_shards == 4
-        hlo = eng.decode_hlo()
-        hits = sorted(set(_COLLECTIVES.findall(hlo)))
-        assert not hits, f"collectives in {kind} decode hot loop: {hits}"
-        print(f"collectives OK kind={kind} (none in {len(hlo)} chars)")
+        nops = _assert_collective_free(eng.decode_hlo(),
+                                       f"decode_hlo[{kind}]")
+        print(f"collectives OK kind={kind} (none in {nops} ops)")
 
 
 def check_paged():
@@ -207,12 +215,10 @@ def check_paged():
     assert s4["num_pages"] == 16 and s4["pages_peak"] >= 1, s4
     assert s4["final_pages_in_use"] == 0, s4
     e4.page_pool.check()                    # allocator invariant audit
-    hlo = e4.decode_hlo()
-    hits = sorted(set(_COLLECTIVES.findall(hlo)))
-    assert not hits, f"collectives in paged decode hot loop: {hits}"
+    nops = _assert_collective_free(e4.decode_hlo(), "decode_hlo[paged]")
     print(f"paged OK: sharded paged streams byte-identical, "
           f"pages_peak={s4['pages_peak']}, no collectives "
-          f"({len(hlo)} chars)")
+          f"({nops} ops)")
 
 
 CHECKS = {"parity": check_parity, "evict_reuse": check_evict_reuse,

@@ -35,7 +35,7 @@ README_ANCHORS = (
 # DESIGN.md section anchors cited by docstrings across src/repro.
 DESIGN_ANCHORS = (
     "## §1", "## §2", "## §3", "## §4", "## §5", "## §6", "## §7", "## §8",
-    "## §9", "## §10", "## §11", "## §12", "## §13",
+    "## §9", "## §10", "## §11", "## §12", "## §13", "## §14",
 )
 
 # Docs whose relative links must resolve.

@@ -1,0 +1,179 @@
+#!/usr/bin/env python
+"""Contract analyzer CLI — the `static-analysis` CI gate (DESIGN.md §14).
+
+Runs the three `repro.analysis` passes plus the style fallback and fails
+(exit 1) on any finding not covered by the committed suppressions
+baseline:
+
+    python tools/lint_contracts.py --all            # everything (CI)
+    python tools/lint_contracts.py --jitlint        # AST rules only
+    python tools/lint_contracts.py --vmem           # Pallas VMEM budget
+    python tools/lint_contracts.py --hlo            # compiled-HLO contracts
+    python tools/lint_contracts.py --style          # ruff-fallback subset
+    python tools/lint_contracts.py --update-vmem-baseline
+
+The --hlo pass compiles the serving engine's donate_argnums entry points
+on a forced-8-device host mesh (data=4) for both cache regimes and
+asserts zero collectives, zero host callbacks, and full donation
+aliasing through the op-level HLO parser. Because jax pins its device
+count at first import, the forced-device flag is set *before* jax loads
+— keep the env setup above every repro/jax import.
+
+When GITHUB_STEP_SUMMARY is set, a markdown findings table is appended
+there (the CI job summary); stdout always carries the plain listing.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+_NEEDS_DEVICES = any(a in ("--hlo", "--all") for a in sys.argv[1:])
+if _NEEDS_DEVICES and "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (os.path.join(_ROOT, "src"), _ROOT):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+from repro.analysis import findings as flib  # noqa: E402
+from repro.analysis import jitlint, style, vmem  # noqa: E402
+from repro.analysis import hlo as hlo_lib  # noqa: E402
+
+_SCAN_SUBDIRS = ("src", "benchmarks", "tests", "tools")
+
+
+def run_jitlint() -> list:
+    return jitlint.scan(_ROOT, subdirs=_SCAN_SUBDIRS)
+
+
+def run_style() -> list:
+    opts = jitlint.Options()
+    files = jitlint.iter_python_files(_ROOT, _SCAN_SUBDIRS, opts)
+    return style.scan_files(files)
+
+
+def run_vmem(update_baseline: bool = False) -> list:
+    footprints = vmem.probe_footprints()
+    if update_baseline:
+        vmem.write_vmem_baseline(footprints)
+        print(f"wrote {vmem.DEFAULT_BASELINE} "
+              f"({len(footprints)} kernels)")
+        return []
+    return vmem.check(footprints)
+
+
+def run_hlo() -> list:
+    """Compile the serving contract surfaces and check HLO001/002/DON001.
+
+    Both cache regimes on the sharded (data=4) mesh: "slay" exercises the
+    constant-state decode, "softmax" the KV-ring decode. Engines are
+    built exactly like tests/sharded_driver.py's so the compiled text
+    matches what serves.
+    """
+    import jax
+
+    from repro import configs
+    from repro.configs.base import ServingConfig
+    from repro.launch.mesh import make_serving_mesh
+    from repro.models import api
+    from repro.serving.engine import ContinuousServingEngine
+
+    if jax.device_count() < 4:
+        return [flib.Finding(
+            rule="HLO000", path="tools/lint_contracts.py", line=0,
+            message=f"--hlo needs >= 4 devices (forced host devices), "
+                    f"got {jax.device_count()}")]
+
+    out = []
+    mesh = make_serving_mesh(4)
+    for kind in ("slay", "softmax"):
+        cfg = configs.get_smoke_config("slayformer-124m", attn_kind=kind)
+        params = api.init_params(cfg, jax.random.PRNGKey(0))
+        eng = ContinuousServingEngine(
+            cfg, params, mesh,
+            serving=ServingConfig(num_slots=4, max_len=64, prefill_chunk=4,
+                                  macro_ticks=8))
+        for name, (text, donated) in eng.contract_lowerings().items():
+            label = f"{name}[{kind}]"
+            module = hlo_lib.parse_hlo(text)
+            out += hlo_lib.check_no_collectives(module, label)
+            out += hlo_lib.check_no_host_ops(module, label)
+            out += hlo_lib.check_donation(module, donated, label)
+            print(f"  hlo: {label}: {len(module.instructions)} ops, "
+                  f"{len(module.donated_params())}/{donated} donated")
+    return out
+
+
+def emit(all_findings, suppressed, stale) -> None:
+    for f in all_findings:
+        print(f.render())
+    if suppressed:
+        print(f"({len(suppressed)} finding(s) suppressed by baseline)")
+    for s in stale:
+        print(f"stale suppression (matched nothing): {s.rule} {s.path} "
+              f"[{s.symbol or '-'}] — delete it")
+    summary_path = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary_path:
+        with open(summary_path, "a") as fh:
+            fh.write(flib.format_table(all_findings,
+                                       title="Contract analyzer findings"))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--all", action="store_true",
+                    help="run every pass (the CI gate)")
+    ap.add_argument("--jitlint", action="store_true")
+    ap.add_argument("--vmem", action="store_true")
+    ap.add_argument("--hlo", action="store_true")
+    ap.add_argument("--style", action="store_true")
+    ap.add_argument("--update-vmem-baseline", action="store_true",
+                    help="regenerate analysis/vmem_baseline.json and exit")
+    ap.add_argument("--baseline", default=flib.DEFAULT_BASELINE,
+                    help="suppressions baseline JSON")
+    args = ap.parse_args(argv)
+
+    if args.update_vmem_baseline:
+        run_vmem(update_baseline=True)
+        return 0
+
+    passes = []
+    if args.all or args.jitlint:
+        passes.append(("jitlint", run_jitlint))
+    if args.all or args.vmem:
+        passes.append(("vmem", run_vmem))
+    if args.all or args.hlo:
+        passes.append(("hlo", run_hlo))
+    if args.all or args.style:
+        passes.append(("style", run_style))
+    if not passes:
+        ap.error("pick at least one pass (or --all)")
+
+    findings = []
+    for name, fn in passes:
+        print(f"[{name}]")
+        got = fn()
+        print(f"  {len(got)} finding(s)")
+        findings += got
+
+    sups = (flib.load_baseline(args.baseline)
+            if os.path.exists(args.baseline) else [])
+    unsuppressed, suppressed, stale = flib.apply_baseline(findings, sups)
+    # A suppression can only be declared stale when every pass ran — a
+    # subset run simply never produces the findings it covers.
+    stale = stale if args.all else []
+    emit(unsuppressed, suppressed, stale)
+    if unsuppressed:
+        print(f"FAIL: {len(unsuppressed)} unsuppressed finding(s)")
+        return 1
+    if stale:
+        print(f"FAIL: {len(stale)} stale suppression(s)")
+        return 1
+    print("lint_contracts OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
